@@ -1,0 +1,73 @@
+"""Fig 6 analogue: dependency-management overhead.
+
+2D grid of nrows x ncols tasks; task (i,j) fulfills ndeps tasks
+((i+k) % nrows, j+1) — the paper's many-dependencies micro-benchmark —
+for TTor (PTG) and the STF baseline (deps inferred from data accesses).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import STFGraph, Taskflow, Threadpool
+
+
+def ttor_grid(nrows: int, ncols: int, ndeps: int, n_threads: int,
+              spin: float) -> float:
+    tp = Threadpool(n_threads, start=False)
+    tf = Taskflow(tp, "grid")
+    tf.set_indegree(lambda ij: 1 if ij[1] == 0 else ndeps)
+    tf.set_mapping(lambda ij: ij[0] % n_threads)
+
+    def body(ij):
+        time.sleep(spin)
+        i, j = ij
+        if j + 1 < ncols:
+            for k in range(ndeps):
+                tf.fulfill_promise(((i + k) % nrows, j + 1))
+
+    tf.set_task(body)
+    t0 = time.perf_counter()
+    tp.start()
+    for i in range(nrows):
+        tf.fulfill_promise((i, 0))
+    tp.join()
+    return time.perf_counter() - t0
+
+
+def stf_grid(nrows: int, ncols: int, ndeps: int, n_threads: int,
+             spin: float) -> float:
+    tp = Threadpool(n_threads)
+    g = STFGraph(tp)
+    t0 = time.perf_counter()
+    for j in range(ncols):
+        for i in range(nrows):
+            accesses = [((i, j), "W")]
+            if j > 0:
+                accesses += [(((i - k) % nrows, j - 1), "R")
+                             for k in range(ndeps)]
+            g.submit(lambda: time.sleep(spin), accesses,
+                     mapping=i % n_threads)
+    g.execute()
+    wall = time.perf_counter() - t0
+    tp.join()
+    return wall
+
+
+def run(report) -> None:
+    from benchmarks.micro_overhead import calibrated_spin
+
+    nrows, spin = 32, 10e-6
+    eff_spin = calibrated_spin(spin)
+    for ndeps in (1, 4):
+        for n_threads in (2, 4):
+            ncols = 60
+            n_tasks = nrows * ncols
+            ideal = eff_spin * n_tasks / n_threads
+            for name, fn in (("ttor", ttor_grid), ("stf", stf_grid)):
+                wall = fn(nrows, ncols, ndeps, n_threads, spin)
+                report(
+                    f"micro_deps/{name}/ndeps{ndeps}/t{n_threads}",
+                    wall / n_tasks * 1e6,
+                    f"efficiency={ideal / wall:.3f}",
+                )

@@ -1,0 +1,89 @@
+"""Fig 5 analogue: shared-memory serial overhead of the runtime.
+
+(a) TTor, insertion excluded (tasks pre-fulfilled, then tp.start());
+(b) TTor, insertion included, vs the STF baseline (sequential submission +
+    inferred deps through an artificial READWRITE datum per task).
+
+Efficiency = ideal_time / wall = (spin x ntasks / nthreads) / wall.
+Python-thread caveat: spin is time.sleep (releases the GIL), so overheads
+measure the *runtime bookkeeping* (queues, dep maps, steals), which is the
+paper's quantity of interest.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import STFGraph, Task, Taskflow, Threadpool
+
+
+def _spin(seconds: float):
+    time.sleep(seconds)
+
+
+def calibrated_spin(spin: float, n: int = 300) -> float:
+    """time.sleep overshoots by the timer slack (~50-100us on Linux);
+    efficiency must be computed against the *achievable* per-task time."""
+    t0 = time.perf_counter()
+    for _ in range(n):
+        time.sleep(spin)
+    return (time.perf_counter() - t0) / n
+
+
+def ttor_no_insertion(n_tasks: int, n_threads: int, spin: float) -> float:
+    tp = Threadpool(n_threads, start=False)
+    tf = Taskflow(tp, "bench")
+    tf.set_indegree(lambda k: 1)
+    tf.set_mapping(lambda k: k % n_threads)
+    tf.set_task(lambda k: _spin(spin))
+    for k in range(n_tasks):
+        tf.fulfill_promise(k)
+    t0 = time.perf_counter()
+    tp.start()
+    tp.join()
+    return time.perf_counter() - t0
+
+
+def ttor_with_insertion(n_tasks: int, n_threads: int, spin: float) -> float:
+    tp = Threadpool(n_threads, start=False)
+    tf = Taskflow(tp, "bench")
+    tf.set_indegree(lambda k: 1)
+    tf.set_mapping(lambda k: k % n_threads)
+    tf.set_task(lambda k: _spin(spin))
+    t0 = time.perf_counter()
+    tp.start()
+    for k in range(n_tasks):
+        tf.fulfill_promise(k)
+    tp.join()
+    return time.perf_counter() - t0
+
+
+def stf_with_insertion(n_tasks: int, n_threads: int, spin: float) -> float:
+    tp = Threadpool(n_threads)
+    g = STFGraph(tp)
+    t0 = time.perf_counter()
+    for k in range(n_tasks):
+        # artificial independent read-write datum per task (paper's setup)
+        g.submit(lambda: _spin(spin), [(f"d{k}", "RW")], mapping=k % n_threads)
+    g.execute()
+    wall = time.perf_counter() - t0
+    tp.join()
+    return wall
+
+
+def run(report) -> None:
+    for spin in (100e-6, 10e-6):
+        eff_spin = calibrated_spin(spin)
+        for n_threads in (1, 2, 4):
+            n_tasks = max(200, int(0.25 / max(spin, 20e-6)) * n_threads)
+            ideal = eff_spin * n_tasks / n_threads
+            for name, fn in (("ttor_noins", ttor_no_insertion),
+                             ("ttor_ins", ttor_with_insertion),
+                             ("stf_ins", stf_with_insertion)):
+                wall = fn(n_tasks, n_threads, spin)
+                report(
+                    f"micro_overhead/{name}/spin{int(spin * 1e6)}us"
+                    f"/t{n_threads}",
+                    wall / n_tasks * 1e6,
+                    f"efficiency={ideal / wall:.3f}",
+                )

@@ -1,0 +1,109 @@
+"""§Roofline: per (arch × shape) terms from the dry-run artifacts.
+
+Sources:
+- flops / bytes / collective bytes: the *unrolled* compile when present
+  (XLA counts while bodies once — launch/flags.py), else the scan-form
+  compile flagged `body_once` (lower bound);
+- memory_analysis: scan-form compile (production HLO).
+
+v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(collective term ≈ wire bytes / link bw; per-device bytes already).
+
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train (fwd+bwd);
+2·N·D for prefill; 2·N_active per token for decode. The MODEL/HLO ratio
+catches remat/redundancy waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports",
+                          "dryrun")
+
+
+def model_flops(cell: dict) -> float:
+    """Global model flops for the cell's step."""
+    n_act = cell["n_active_params"]
+    tokens = cell["seq_len"] * cell["global_batch"]
+    if cell["kind"] == "train":
+        return 6.0 * n_act * tokens
+    if cell["kind"] == "prefill":
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * cell["global_batch"]  # decode: one token per seq
+
+
+def load_cells(report_dir: str = REPORT_DIR):
+    cells = {}
+    for f in glob.glob(os.path.join(report_dir, "*__pod.json")):
+        d = json.load(open(f))
+        if d.get("status") != "ok":
+            continue
+        key = (d["arch"], d["shape"])
+        unrolled = f.replace("__pod.json", "__pod_unrolled.json")
+        src = "body_once"
+        if os.path.exists(unrolled):
+            du = json.load(open(unrolled))
+            if du.get("status") == "ok":
+                d["per_device"].update(
+                    {k: du["per_device"][k] for k in
+                     ("flops", "bytes_accessed", "collective_bytes",
+                      "transcendentals")})
+                src = "unrolled"
+        d["cost_source"] = src
+        cells[key] = d
+    return cells
+
+
+def roofline_row(d: dict) -> dict:
+    pd = d["per_device"]
+    chips = d["n_chips"]
+    t_compute = pd["flops"] / PEAK_FLOPS
+    t_memory = pd["bytes_accessed"] / HBM_BW
+    t_coll = pd["collective_bytes"]["total"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(d)
+    hlo_global = pd["flops"] * chips
+    mem_gb = (pd["argument_bytes"] + pd["temp_bytes"]
+              + pd["output_bytes"]) / 1e9
+    return {
+        "arch": d["arch"], "shape": d["shape"], "kind": d["kind"],
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "hbm_gb": mem_gb,
+        "fits_16gb": mem_gb < 16.0,
+        "cost_source": d["cost_source"],
+        "step_s": max(terms.values()),
+        "roofline_fraction": (t_compute / max(terms.values())
+                              if max(terms.values()) > 0 else 0.0),
+    }
+
+
+def run(report) -> None:
+    cells = load_cells()
+    if not cells:
+        report("roofline/no_data", 0.0, "run launch/dryrun sweep first")
+        return
+    for (arch, shape), d in sorted(cells.items()):
+        r = roofline_row(d)
+        report(
+            f"roofline/{arch}/{shape}",
+            r["step_s"] * 1e6,
+            f"dom={r['dominant']};comp={r['compute_s']:.4f}s;"
+            f"mem={r['memory_s']:.4f}s;coll={r['collective_s']:.4f}s;"
+            f"useful={r['useful_ratio']:.2f};hbm={r['hbm_gb']:.1f}GB;"
+            f"src={r['cost_source']}",
+        )
+
+
+def table() -> list:
+    return [roofline_row(d) for _, d in sorted(load_cells().items())]

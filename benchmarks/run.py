@@ -1,0 +1,53 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  micro_overhead    Fig 5  (no-dependency overhead, TTor vs STF)
+  micro_deps        Fig 6  (dependency-management overhead)
+  gemm_scaling      Fig 7  (distributed GEMM: scaling, block sweep, AMs)
+  cholesky_scaling  Fig 9  (distributed Cholesky: scaling, block, rho)
+  roofline          §Roofline (reads reports/dryrun JSONs)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (cholesky_scaling, gemm_scaling, micro_deps,
+                            micro_overhead, roofline)
+
+    modules = {
+        "micro_overhead": micro_overhead,
+        "micro_deps": micro_deps,
+        "gemm_scaling": gemm_scaling,
+        "cholesky_scaling": cholesky_scaling,
+        "roofline": roofline,
+    }
+    if args.only:
+        modules = {k: v for k, v in modules.items() if k in args.only}
+
+    print("name,us_per_call,derived")
+    failed = []
+
+    def report(name: str, us: float, derived: str = "") -> None:
+        print(f"{name},{us:.3f},{derived}", flush=True)
+
+    for name, mod in modules.items():
+        try:
+            mod.run(report)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        sys.exit(f"benchmark module(s) failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""The paper's flagship app end-to-end: distributed blocked Cholesky as a
+PTG, executed on BOTH backends from the same spec —
+
+  (a) the host TaskTorrent runtime: async tasks + work stealing + one-sided
+      active messages + distributed completion detection;
+  (b) the compiled SPMD executor: parallel DAG discovery -> wavefront
+      schedule -> shard_map with fused all_to_all "large AMs".
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=4 to see real
+multi-device sharding in (b).
+
+  PYTHONPATH=src python examples/distributed_cholesky.py --nb 8 --block 32
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import build_block_program
+from repro.linalg.cholesky import (assemble_lower, cholesky_bodies,
+                                   cholesky_spec, make_spd_blocks)
+from repro.linalg.host_exec import run_host_ptg
+
+
+def np_bodies():
+    return {
+        "potrf": lambda a: np.linalg.cholesky(a),
+        "trsm": lambda a, l_kk: np.linalg.solve(l_kk, a.T).T,
+        "syrk": lambda a, l: a - l @ l.T,
+        "gemm": lambda a, li, lj: a - li @ lj.T,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nb", type=int, default=8)
+    ap.add_argument("--block", type=int, default=32)
+    ap.add_argument("--grid", type=int, nargs=2, default=(2, 2))
+    args = ap.parse_args()
+    pr, pc = args.grid
+    nb, b = args.nb, args.block
+    n = nb * b
+
+    spec = cholesky_spec(nb, pr, pc, b)
+    blocks, a = make_spd_blocks(nb, b)
+    want = np.linalg.cholesky(a)
+
+    # (a) host runtime
+    t0 = time.perf_counter()
+    host = run_host_ptg(spec, blocks, np_bodies(), n_threads=2)
+    t_host = time.perf_counter() - t0
+    l_host = assemble_lower(host, nb, b)
+    print(f"[host runtime]  N={n} on {pr}x{pc} ranks: {t_host * 1e3:7.1f} ms  "
+          f"max|err|={np.abs(l_host - want).max():.2e}")
+
+    # (b) compiled backend
+    prog = build_block_program(spec)
+    n_dev = len(jax.devices())
+    if n_dev < pr * pc:
+        print(f"[compiled]      only {n_dev} device(s): set XLA_FLAGS="
+              f"--xla_force_host_platform_device_count={pr * pc} "
+              "for real sharding; running anyway if possible")
+    mesh = jax.sharding.Mesh(
+        np.array((jax.devices() * (pr * pc))[: pr * pc]), ("shards",)) \
+        if n_dev < pr * pc else jax.sharding.Mesh(
+            np.array(jax.devices()[: pr * pc]), ("shards",))
+    if n_dev >= pr * pc:
+        with mesh:
+            run = jax.jit(prog.executor(cholesky_bodies(), mesh))
+            out = prog.unpack(run(jnp.asarray(prog.pack(blocks))))  # warmup
+            t0 = time.perf_counter()
+            out = prog.unpack(
+                jax.block_until_ready(run(jnp.asarray(prog.pack(blocks)))))
+            t_comp = time.perf_counter() - t0
+        l_comp = assemble_lower(out, nb, b)
+        print(f"[compiled SPMD] N={n} on {pr * pc} shards: "
+              f"{t_comp * 1e3:7.1f} ms  "
+              f"max|err|={np.abs(l_comp - want).max():.2e}")
+    st = prog.comm_stats()
+    print(f"schedule: {prog.schedule.n_wavefronts} wavefronts | wire "
+          f"{st['real_bytes'] / 1e6:.2f} MB real / "
+          f"{st['padded_bytes'] / 1e6:.2f} MB padded (fused large AMs)")
+
+
+if __name__ == "__main__":
+    main()

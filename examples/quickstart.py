@@ -1,0 +1,88 @@
+"""Quickstart: TaskTorrent's two halves in ~80 lines.
+
+1. The host runtime — the paper's §II-A3 example: a distributed PTG where
+   task k's output is shipped to the rank owning task k+1 via an active
+   message that stores the payload and fulfills the promise.
+2. The compiled backend — the same PTG idea lowered to a lockstep SPMD
+   program (here: a tiny distributed Cholesky through shard_map on however
+   many host devices are available; run with
+   XLA_FLAGS=--xla_force_host_platform_device_count=4 for real sharding).
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import run_ranks
+
+
+def host_runtime_demo():
+    n_ranks, chain = 3, 12
+
+    def main(ctx):
+        data = {}
+        tf = ctx.taskflow("chain")
+        am = {}
+
+        tf.set_indegree(lambda k: 1)
+        tf.set_mapping(lambda k: k % ctx.tp.n_threads)
+
+        def body(k):
+            value = data.get(k, 0) + k          # "compute"
+            dest_rank = (k + 1) % ctx.n_ranks
+            if k + 1 < chain:
+                if dest_rank == ctx.rank:
+                    data[k + 1] = value
+                    tf.fulfill_promise(k + 1)
+                else:                            # one-sided active message
+                    am["am"].send(dest_rank, k + 1, value)
+
+        tf.set_task(body)
+        am["am"] = ctx.comm.make_active_msg(
+            lambda k, v: (data.__setitem__(k, v), tf.fulfill_promise(k)))
+
+        if ctx.rank == 0:
+            data[0] = 0
+            tf.fulfill_promise(0)
+        ctx.tp.join()                            # distributed completion
+        return data
+
+    results = run_ranks(n_ranks, main, n_threads=2)
+    total = {k: v for r in results for k, v in r.items()}
+    assert total[chain - 1] == sum(range(chain - 1)), total
+    print(f"[host runtime] chain of {chain} tasks across {n_ranks} ranks: "
+          f"final value {total[chain - 1]} (= sum 0..{chain - 2})")
+
+
+def compiled_backend_demo():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.schedule import build_block_program
+    from repro.linalg.cholesky import (assemble_lower, cholesky_bodies,
+                                       cholesky_spec, make_spd_blocks)
+
+    n_dev = len(jax.devices())
+    pr = 2 if n_dev >= 2 else 1
+    pc = 2 if n_dev >= 4 else 1
+    nb, b = 4, 16
+    spec = cholesky_spec(nb, pr, pc, b)
+    prog = build_block_program(spec)
+    blocks, a = make_spd_blocks(nb, b)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[: pr * pc]), ("shards",))
+    with mesh:
+        run = jax.jit(prog.executor(cholesky_bodies(), mesh))
+        out = prog.unpack(run(jnp.asarray(prog.pack(blocks))))
+    l = assemble_lower(out, nb, b)
+    err = np.abs(l @ l.T - a).max()
+    print(f"[compiled backend] {nb}x{nb}-block Cholesky on {pr * pc} "
+          f"shard(s): |LL^T - A|_max = {err:.2e}")
+    stats = prog.comm_stats()
+    print(f"  schedule: {prog.schedule.n_wavefronts} wavefronts, "
+          f"{stats['real_bytes'] / 1e3:.1f} KB on the wire "
+          f"(fused large-AM buffers)")
+
+
+if __name__ == "__main__":
+    host_runtime_demo()
+    compiled_backend_demo()

@@ -1,0 +1,100 @@
+"""End-to-end training driver: model + optimizer + deterministic data +
+async checkpointing + restart, on any --arch from the registry.
+
+Defaults train a reduced config on a *learnable* synthetic task (arithmetic
+progressions mod vocab) so the loss demonstrably falls on CPU in minutes.
+On hardware, pass --full for the exact published config and point --data at
+a packed uint32 token file.
+
+  PYTHONPATH=src python examples/train_lm.py --arch qwen3-14b --steps 60
+  PYTHONPATH=src python examples/train_lm.py --arch yi-6b --resume ...
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.train import checkpoint as ckpt
+from repro.train.data import PackedBinaryDataset, SyntheticLM
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="published config (hardware scale)")
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--vocab", type=int, default=None)
+    ap.add_argument("--d-ff", type=int, default=None)
+    ap.add_argument("--data", default=None, help="packed uint32 token file")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        overrides = {}
+        if args.d_model:
+            overrides.update(d_model=args.d_model, d_head=args.d_model // 8,
+                             n_heads=8, n_kv_heads=4)
+        if args.layers:
+            overrides["n_layers"] = args.layers
+        if args.vocab:
+            overrides["vocab_size"] = args.vocab
+        if args.d_ff:
+            overrides["d_ff"] = args.d_ff
+        cfg = reduced(cfg, **overrides)
+    print(f"arch={cfg.name} params={cfg.n_params() / 1e6:.1f}M "
+          f"(active {cfg.n_active_params() / 1e6:.1f}M) opt={cfg.optimizer}")
+
+    if args.data:
+        ds = PackedBinaryDataset(args.data, args.seq, args.batch)
+    else:
+        ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch,
+                         embed_dim=cfg.d_model if cfg.embed_inputs else None,
+                         encdec=cfg.family == "encdec", learnable=True)
+
+    params, opt_state = init_train_state(cfg, jax.random.key(0))
+    start = 0
+    latest = ckpt.latest_step(args.ckpt_dir)
+    if latest is not None:
+        print(f"resuming from checkpoint step {latest}")
+        state = ckpt.restore(args.ckpt_dir, latest,
+                             {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start = latest
+
+    step_fn = jax.jit(make_train_step(cfg, lr=args.lr))
+    saver = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=2)
+
+    t0 = time.time()
+    for step in range(start, start + args.steps):
+        batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % 5 == 0 or step == start + args.steps - 1:
+            loss = float(metrics["loss"])
+            gn = float(metrics["grad_norm"])
+            tok_s = (step - start + 1) * args.batch * args.seq \
+                / (time.time() - t0)
+            print(f"step {step:5d}  loss {loss:7.4f}  |g| {gn:8.3f}  "
+                  f"{tok_s:9.0f} tok/s", flush=True)
+        if step and step % args.ckpt_every == 0:
+            saver.save(step, {"params": params, "opt": opt_state})
+    saver.wait()  # quiesce in-flight writes before exit (completion rule)
+    print("done; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

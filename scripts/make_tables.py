@@ -1,0 +1,72 @@
+"""Regenerate the §Dry-run and §Roofline markdown tables from
+reports/dryrun/*.json into reports/tables/. EXPERIMENTS.md embeds these.
+
+Usage: PYTHONPATH=src:. python scripts/make_tables.py
+"""
+
+import json
+import glob
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import load_cells, model_flops, roofline_row  # noqa
+
+
+def gb(x):
+    return f"{x / 2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted(glob.glob("reports/dryrun/*__pod.json")) + \
+            sorted(glob.glob("reports/dryrun/*__multi.json")):
+        d = json.load(open(f))
+        mesh = "2x16x16" if "__multi" in f else "16x16"
+        if d["status"] == "skipped":
+            rows.append(f"| {d['arch']} | {d['shape']} | {mesh} | skipped "
+                        f"(full attention; DESIGN §5) | | | | |")
+            continue
+        pd = d["per_device"]
+        state_gb = gb(pd["argument_bytes"])
+        temp_gb = gb(pd["temp_bytes"])
+        fits = "yes" if (pd["argument_bytes"] + pd["temp_bytes"]
+                         + pd["output_bytes"]) < 16 * 2**30 else "NO"
+        coll = pd["collective_bytes"]
+        cc = coll["counts"]
+        collstr = "/".join(str(cc[k]) for k in
+                           ("all-gather", "all-reduce", "reduce-scatter",
+                            "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | {mesh} | ok "
+            f"({d['compile_s']:.0f}s) | {state_gb} | {temp_gb} | {fits} "
+            f"| {collstr} |")
+    head = ("| arch | shape | mesh | compile | state GiB/dev | temp GiB/dev "
+            "| fits 16 GiB | colls ag/ar/rs/a2a/cp |\n"
+            "|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = []
+    for r in [roofline_row(d) for _, d in sorted(load_cells().items())]:
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+            f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| **{r['dominant']}** | {r['model_flops']:.3g} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} "
+            f"| {r['cost_source']} |")
+    head = ("| arch | shape | compute s | memory s | collective s | "
+            "dominant | MODEL_FLOPS | useful ratio | roofline frac | src |\n"
+            "|---|---|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+if __name__ == "__main__":
+    os.makedirs("reports/tables", exist_ok=True)
+    with open("reports/tables/dryrun.md", "w") as f:
+        f.write(dryrun_table() + "\n")
+    with open("reports/tables/roofline.md", "w") as f:
+        f.write(roofline_table() + "\n")
+    print("wrote reports/tables/{dryrun,roofline}.md")

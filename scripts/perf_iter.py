@@ -1,0 +1,75 @@
+"""§Perf iteration runner: recompile one cell with knob overrides and diff
+its roofline terms against the stored baseline.
+
+Usage:
+  PYTHONPATH=src:. python scripts/perf_iter.py --arch grok-1-314b \
+      --shape train_4k --set REPRO_REMAT=dots [--unroll] [--tag dots]
+
+Writes reports/perf/<arch>__<shape>__<tag>.json and prints the delta table.
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def terms(pd):
+    return {
+        "compute_s": (pd["flops"] or 0) / PEAK_FLOPS,
+        "memory_s": (pd["bytes_accessed"] or 0) / HBM_BW,
+        "collective_s": pd["collective_bytes"]["total"] / ICI_BW,
+        "temp_gb": pd["temp_bytes"] / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", nargs="*", default=[], help="ENV=VALUE knobs")
+    ap.add_argument("--unroll", action="store_true")
+    ap.add_argument("--tag", required=True)
+    args = ap.parse_args()
+
+    env = dict(os.environ)
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        env[k] = v
+    env["PYTHONPATH"] = "src"
+
+    outdir = "reports/perf"
+    os.makedirs(outdir, exist_ok=True)
+    tmpdir = os.path.join(outdir, f"_tmp_{args.tag}")
+    os.makedirs(tmpdir, exist_ok=True)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+           "--shape", args.shape, "--out-dir", tmpdir]
+    if args.unroll:
+        cmd.append("--unroll")
+    subprocess.run(cmd, env=env, check=True)
+
+    suffix = "pod_unrolled" if args.unroll else "pod"
+    got = json.load(open(os.path.join(
+        tmpdir, f"{args.arch}__{args.shape}__{suffix}.json")))
+    final = os.path.join(outdir, f"{args.arch}__{args.shape}__{args.tag}.json")
+    got["knobs"] = args.set
+    json.dump(got, open(final, "w"), indent=2)
+
+    base_path = f"reports/dryrun/{args.arch}__{args.shape}__{suffix}.json"
+    if os.path.exists(base_path):
+        base = json.load(open(base_path))
+        bt, gt = terms(base["per_device"]), terms(got["per_device"])
+        print(f"\n{'term':14s}{'baseline':>12s}{'this':>12s}{'delta':>9s}")
+        for k in bt:
+            d = (gt[k] - bt[k]) / bt[k] * 100 if bt[k] else float("nan")
+            print(f"{k:14s}{bt[k]:12.4f}{gt[k]:12.4f}{d:8.1f}%")
+    print("\nwrote", final)
+
+
+if __name__ == "__main__":
+    main()

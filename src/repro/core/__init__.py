@@ -1,0 +1,24 @@
+"""repro.core — TaskTorrent: PTG task runtime + one-sided active messages.
+
+Host-dynamic layer (faithful to the paper):
+  Threadpool, Taskflow, Communicator/ActiveMsg/view, CompletionDetector,
+  run_ranks (SPMD rank emulation), STFGraph (StarPU-style baseline).
+
+Compiled layer (TPU-native adaptation):
+  PTG -> per-shard parallel DAG discovery -> wavefront schedule -> shard_map
+  lowering with batched collective "active messages" (see discovery.py /
+  schedule.py).
+"""
+
+from .completion import CompletionDetector
+from .messages import ActiveMsg, Communicator, InProcWorld, view
+from .runtime import RankContext, run_ranks
+from .stf import READ, READWRITE, STFGraph, WRITE
+from .taskflow import Taskflow
+from .threadpool import Task, Threadpool
+
+__all__ = [
+    "ActiveMsg", "Communicator", "CompletionDetector", "InProcWorld",
+    "RankContext", "READ", "READWRITE", "STFGraph", "Task", "Taskflow",
+    "Threadpool", "WRITE", "run_ranks", "view",
+]

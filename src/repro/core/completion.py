@@ -1,0 +1,156 @@
+"""Distributed completion detection — §II-B3 of the paper, verbatim.
+
+The difficulty: all taskflows being idle does *not* imply termination — AMs
+may still be in flight, and a naive all-ranks-idle signal terminates early.
+The paper's protocol (with correctness proof, Lemma 1 + Theorems 1-2):
+
+every rank r tracks monotone counters ``q_r`` (user AMs queued) and ``p_r``
+(user AMs processed); protocol messages are excluded from both.
+
+1. COUNT        — when rank r's worker pool is idle and (q_r, p_r) differ
+                  from the last values it sent, r sends (r, q_r, p_r) to 0.
+2. REQUEST      — rank 0 keeps the *latest* counts per rank (they are
+                  monotone, so greatest wins; stale ones are discarded).
+                  When Σq == Σp and that sum differs from the last sum it
+                  requested on, it sends (q_r, p_r, t̃) back to every rank,
+                  echoing each rank's own counts, with a strictly increasing
+                  integer tag t̃ (the synchronization time).
+3. CONFIRMATION — rank r processes the REQUEST with the largest t̃ only; if
+                  its counts are *unchanged* from the echoed ones (and its
+                  workers are still idle), it replies (t̃).
+4. SHUTDOWN     — once every rank confirmed the latest t̃ (rank 0 checking
+                  itself directly), completion is certain: rank 0 broadcasts
+                  SHUTDOWN.
+5. ranks terminate on SHUTDOWN.
+
+The two-phase check (COUNT then CONFIRMATION around the same t̃) is exactly
+what Lemma 1 needs: counts stable across a synchronization time with equal
+global sums ⇒ every queued message was processed ⇒ quiescence is permanent.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from .messages import Communicator
+
+COUNT, REQUEST, CONFIRMATION, SHUTDOWN = "COUNT", "REQUEST", "CONFIRMATION", "SHUTDOWN"
+
+
+@dataclass
+class _Rank0State:
+    latest: Dict[int, Tuple[int, int]] = field(default_factory=dict)
+    tilde_t: int = 0
+    last_requested_sum: Optional[int] = None
+    requested: Dict[int, Tuple[int, int]] = field(default_factory=dict)
+    confirmations: set = field(default_factory=set)
+    sent_shutdown: bool = False
+
+
+class CompletionDetector:
+    """Drives the §II-B3 protocol for one rank; ``step()`` runs inside the
+    main thread's progress loop ("continuously")."""
+
+    def __init__(self, comm: Communicator):
+        self.comm = comm
+        self.rank = comm.rank
+        self.n_ranks = comm.n_ranks
+        self._last_sent: Optional[Tuple[int, int]] = None
+        # REQUEST handling (all ranks, incl. 0 via direct path)
+        self._pending_request: Optional[Tuple[int, Tuple[int, int]]] = None
+        self._confirmed_tilde: int = -1
+        self._r0 = _Rank0State() if self.rank == 0 else None
+        comm.attach_detector(self)
+
+    # ----------------------------------------------------------- inbound
+
+    def on_message(self, wire) -> None:
+        if wire.kind == COUNT:
+            r, q, p = wire.meta
+            prev = self._r0.latest.get(r)
+            if prev is None or (q, p) > prev:  # monotone: keep greatest
+                self._r0.latest[r] = (q, p)
+        elif wire.kind == REQUEST:
+            counts, tilde_t = wire.meta
+            if self._pending_request is None or tilde_t > self._pending_request[0]:
+                self._pending_request = (tilde_t, counts)  # largest t̃ wins
+        elif wire.kind == CONFIRMATION:
+            tilde_t = wire.meta
+            if tilde_t == self._r0.tilde_t:
+                self._r0.confirmations.add(wire.src)
+        elif wire.kind == SHUTDOWN:
+            self.comm.shutdown.set()
+
+    # ------------------------------------------------------------- driver
+
+    def step(self) -> None:
+        self._step_count()
+        self._step_confirm()
+        if self.rank == 0:
+            self._step_rank0()
+
+    def _counts(self) -> Tuple[int, int]:
+        return (self.comm.queued_count, self.comm.processed_count)
+
+    def _step_count(self) -> None:
+        """Step 1: idle + changed counts -> COUNT to rank 0 (t_r^-)."""
+        if not self.comm.worker_idle():
+            return
+        counts = self._counts()
+        if counts != self._last_sent:
+            self._last_sent = counts
+            if self.rank == 0:
+                self.on_message(_wire(COUNT, 0, (0, *counts)))
+            else:
+                self.comm.protocol_send(0, COUNT, (self.rank, *counts))
+
+    def _step_confirm(self) -> None:
+        """Step 3: largest-t̃ REQUEST; counts unchanged at t_r^+ -> CONFIRM."""
+        if self._pending_request is None:
+            return
+        tilde_t, echoed = self._pending_request
+        if tilde_t <= self._confirmed_tilde:
+            return
+        if self.comm.worker_idle() and self._counts() == echoed:
+            self._confirmed_tilde = tilde_t
+            if self.rank == 0:
+                self._r0.confirmations.add(0)
+            else:
+                self.comm.protocol_send(0, CONFIRMATION, tilde_t)
+
+    def _step_rank0(self) -> None:
+        r0 = self._r0
+        if r0.sent_shutdown:
+            return
+        # Step 4: all ranks confirmed the latest t̃ -> SHUTDOWN.
+        if r0.tilde_t > 0 and len(r0.confirmations) == self.n_ranks:
+            r0.sent_shutdown = True
+            for r in range(1, self.n_ranks):
+                self.comm.protocol_send(r, SHUTDOWN, None)
+            self.comm.shutdown.set()
+            return
+        # Step 2: sums equal & new -> REQUEST(t̃) with echoed counts.
+        if len(r0.latest) < self.n_ranks:
+            return
+        sum_q = sum(q for q, _ in r0.latest.values())
+        sum_p = sum(p for _, p in r0.latest.values())
+        if sum_q != sum_p:
+            return
+        snapshot = dict(r0.latest)
+        if snapshot == r0.requested and r0.last_requested_sum == sum_q:
+            return  # nothing new since the last REQUEST round
+        r0.tilde_t += 1
+        r0.last_requested_sum = sum_q
+        r0.requested = snapshot
+        r0.confirmations = set()
+        for r in range(1, self.n_ranks):
+            self.comm.protocol_send(r, REQUEST, (snapshot[r], r0.tilde_t))
+        # rank 0 "receives" its own request directly
+        self._pending_request = (r0.tilde_t, snapshot[0])
+
+
+def _wire(kind, src, meta):
+    from .messages import _Wire
+
+    return _Wire(kind, src, meta=meta)

@@ -1,0 +1,250 @@
+"""One-sided active messages (§II-A2) over an in-process multi-rank world.
+
+An **active message** (AM) is a pair ``(function, payload)``: sent from rank
+*a* to rank *b*, the payload travels the network and on arrival the function
+runs on *b* with the payload as arguments — the receiver never waits.
+
+Semantics kept faithful to the paper:
+
+- ``make_active_msg`` must be called in the *same order on every rank*; the
+  registration index is the globally-consistent AM id used to look the
+  function up on the receiver (§II-B2).
+- ``send`` serializes the payload into a temporary buffer immediately, so
+  caller arguments are reusable the moment ``send`` returns; it is
+  thread-safe (any worker may send).
+- **Large AMs** skip the temporary copy: the payload contains one
+  :class:`view` sent "directly" plus regular args, with the three-callback
+  contract — receiver-side buffer allocation, receiver-side processing, and
+  a sender-side completion hook that fires when the sender buffer is
+  reusable.
+- The communicator counts *queued* and *processed* user AMs (``q_r``,
+  ``p_r``); protocol traffic (completion detection) is excluded, exactly as
+  required by §II-B3 step 1.
+
+The "network" here is :class:`InProcWorld`: one inbox per rank, with
+injectable per-message delivery delay and reordering so the completion
+protocol can be stress-tested adversarially. Semantically each rank is one
+MPI rank; the mapping to a real cluster is one process per node with this
+module's queues replaced by MPI_Isend/Iprobe/Irecv (the paper's transport).
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+import pickle
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence
+
+import numpy as np
+
+
+class view:
+    """A (pointer, length) view over a contiguous buffer (paper's view<T>)."""
+
+    def __init__(self, array):
+        self.array = np.asarray(array)
+
+    def __len__(self) -> int:
+        return self.array.size
+
+
+@dataclass
+class _Wire:
+    """One message on the wire."""
+
+    kind: str          # "am" | "large_am" | protocol kinds
+    src: int
+    am_id: int = -1
+    blob: bytes = b""          # pickled regular args
+    raw: Optional[np.ndarray] = None  # large-AM view payload (no copy)
+    meta: Any = None           # protocol payload
+
+
+class InProcWorld:
+    """Per-rank inboxes + optional adversarial delivery (delay / reorder)."""
+
+    def __init__(self, n_ranks: int, delay_fn: Optional[Callable[..., float]] = None):
+        self.n_ranks = n_ranks
+        self.delay_fn = delay_fn
+        # Set when any rank dies: every other rank aborts instead of waiting
+        # forever inside the completion protocol.
+        self.poison = threading.Event()
+        self._locks = [threading.Lock() for _ in range(n_ranks)]
+        # Each inbox is a heap of (deliver_at, seq, wire).
+        self._inboxes: List[list] = [[] for _ in range(n_ranks)]
+        self._seq = itertools.count()
+        self._fingerprints: List[list] = [[] for _ in range(n_ranks)]
+
+    def send(self, dst: int, wire: _Wire) -> None:
+        delay = self.delay_fn(wire.src, dst, wire.kind) if self.delay_fn else 0.0
+        deliver_at = time.monotonic() + delay
+        with self._locks[dst]:
+            heapq.heappush(self._inboxes[dst], (deliver_at, next(self._seq), wire))
+
+    def poll(self, rank: int) -> List[_Wire]:
+        """Pop every message whose delivery time has arrived."""
+        now = time.monotonic()
+        out: List[_Wire] = []
+        with self._locks[rank]:
+            inbox = self._inboxes[rank]
+            while inbox and inbox[0][0] <= now:
+                out.append(heapq.heappop(inbox)[2])
+        return out
+
+    def register_fingerprint(self, rank: int, fp: str) -> int:
+        """Record AM registration order; verify global consistency (§II-B2)."""
+        fps = self._fingerprints[rank]
+        am_id = len(fps)
+        fps.append(fp)
+        for other in range(self.n_ranks):
+            others = self._fingerprints[other]
+            if len(others) > am_id and others[am_id] != fp:
+                raise RuntimeError(
+                    f"active messages registered in different orders: rank {rank} "
+                    f"registered {fp!r} as id {am_id}, rank {other} has {others[am_id]!r}"
+                )
+        return am_id
+
+
+class ActiveMsg:
+    """Handle returned by ``Communicator.make_active_msg`` (paper's am->send)."""
+
+    def __init__(self, comm: "Communicator", am_id: int, large: bool):
+        self._comm = comm
+        self.am_id = am_id
+        self.large = large
+
+    def send(self, dest: int, *args) -> None:
+        self._comm._send_am(self, dest, args)
+
+    # paper examples use `am->send(...)`; both spellings provided
+    __call__ = send
+
+
+class Communicator:
+    """AM factory + transport endpoint for one rank (paper's Communicator).
+
+    Maintains the three queues of §II-B2 (ready-to-send / in-flight sends /
+    received-to-run); with the in-process transport the in-flight-send queue
+    collapses to the sender-completion callback list for large AMs.
+    """
+
+    def __init__(self, world: InProcWorld, rank: int):
+        self.world = world
+        self.rank = rank
+        self.n_ranks = world.n_ranks
+        self._registry: List[dict] = []
+        self._send_lock = threading.Lock()
+        # Monotone counters over *user* AMs only (q_r / p_r of §II-B3).
+        self.queued_count = 0
+        self.processed_count = 0
+        self._pending_sender_callbacks: List[Callable[[], None]] = []
+        self._tp = None
+        self._detector = None  # attached by runtime for distributed join
+        self.shutdown = threading.Event()
+
+    # ----------------------------------------------------------- factories
+
+    def make_active_msg(self, fn: Callable[..., None]) -> ActiveMsg:
+        am_id = self.world.register_fingerprint(self.rank, f"am:{fn.__name__}")
+        self._registry.append({"fn": fn, "large": False})
+        return ActiveMsg(self, am_id, large=False)
+
+    def make_large_active_msg(
+        self,
+        fn: Callable[..., None],
+        alloc: Callable[..., np.ndarray],
+        complete: Callable[[], None],
+    ) -> ActiveMsg:
+        """Large AM (§II-A2a): ``alloc(*args)`` returns the receiver buffer the
+        view is stored into (zero extra copy); ``fn(*args)`` processes it after
+        arrival; ``complete()`` runs on the *sender* once its buffer is
+        reusable."""
+        am_id = self.world.register_fingerprint(self.rank, f"lam:{fn.__name__}")
+        self._registry.append({"fn": fn, "large": True, "alloc": alloc,
+                               "complete": complete})
+        return ActiveMsg(self, am_id, large=True)
+
+    # -------------------------------------------------------------- sending
+
+    def _send_am(self, am: ActiveMsg, dest: int, args: Sequence[Any]) -> None:
+        views = [a for a in args if isinstance(a, view)]
+        plain = tuple(a for a in args if not isinstance(a, view))
+        if am.large:
+            if len(views) != 1:
+                raise ValueError("a large AM payload must contain exactly one view")
+            raw = views[0].array  # sent directly — no temporary copy
+        else:
+            if views:
+                # Regular AMs serialize everything (copy) — views included.
+                plain = tuple(a.array.copy() if isinstance(a, view) else a
+                              for a in args)
+            raw = None
+        blob = pickle.dumps(plain)  # the paper's temporary serialization buffer
+        with self._send_lock:
+            self.queued_count += 1
+            self.world.send(dest, _Wire("large_am" if am.large else "am",
+                                        self.rank, am.am_id, blob, raw))
+            if am.large:
+                entry = self._registry[am.am_id]
+                self._pending_sender_callbacks.append(entry["complete"])
+
+    def protocol_send(self, dest: int, kind: str, meta: Any) -> None:
+        """Completion-protocol traffic — excluded from q/p counts."""
+        self.world.send(dest, _Wire(kind, self.rank, meta=meta))
+
+    # ------------------------------------------------------------- progress
+
+    def attach_threadpool(self, tp) -> None:
+        self._tp = tp
+
+    def attach_detector(self, detector) -> None:
+        self._detector = detector
+
+    def progress(self) -> None:
+        """One progress step of the main/MPI thread (§II-B2)."""
+        # Sender-side completions ("MPI_Test succeeded").
+        callbacks, self._pending_sender_callbacks = (
+            self._pending_sender_callbacks, [])
+        for cb in callbacks:
+            cb()
+        for wire in self.world.poll(self.rank):
+            if wire.kind == "am":
+                entry = self._registry[wire.am_id]
+                entry["fn"](*pickle.loads(wire.blob))
+                self.processed_count += 1
+            elif wire.kind == "large_am":
+                entry = self._registry[wire.am_id]
+                args = pickle.loads(wire.blob)
+                buf = entry["alloc"](*args)
+                np.copyto(np.asarray(buf).reshape(-1), wire.raw.reshape(-1))
+                entry["fn"](*args)
+                self.processed_count += 1
+            else:
+                self._detector.on_message(wire)
+
+    def worker_idle(self) -> bool:
+        return self._tp is None or self._tp.quiescent()
+
+    def run_until_shutdown(self) -> None:
+        """Main-thread loop: progress + completion detection until SHUTDOWN."""
+        if self._detector is None:
+            # Single-rank shared-memory mode: local quiescence == completion.
+            while not (self.worker_idle() and not self._has_traffic()):
+                self.progress()
+                time.sleep(20e-6)
+            self.shutdown.set()
+            return
+        while not self.shutdown.is_set():
+            if self.world.poison.is_set():
+                raise RuntimeError("world poisoned: another rank failed")
+            self.progress()
+            self._detector.step()
+            time.sleep(10e-6)
+
+    def _has_traffic(self) -> bool:
+        with self.world._locks[self.rank]:
+            return bool(self.world._inboxes[self.rank])

@@ -1,0 +1,365 @@
+"""Lowering a block-PTG to a lockstep SPMD program — TaskTorrent on TPU.
+
+The host runtime executes the PTG asynchronously; a TPU pod is lockstep
+SPMD, so we lower the *schedule produced by parallel discovery*
+(`discovery.discover`) into data: per-(wavefront, task-type) index tables,
+and a per-wavefront exchange plan. One generic `shard_map` executor then
+runs *any* block PTG (GEMM, Cholesky, ...):
+
+    wavefront w:  for each task type t:
+                      gather operand blocks by table -> vmap(body_t) -> scatter
+                  exchange: all_to_all of the blocks crossing shards at w
+                      (all messages of a (src,dst) pair ride one buffer — the
+                      compiled analogue of the paper's *large AM* batching)
+
+Contract (checked at build time):
+- every task writes exactly one block, owned by the task's shard
+  ("owner computes" — the paper's 2D GEMM mapping rule);
+- a block that crosses shards has exactly one writer (single assignment for
+  communicated data; local blocks may be read-modify-written freely);
+- operand reads always see the value produced at a strictly earlier
+  wavefront (guaranteed by the leveling, re-checked here).
+
+Padding goes to a *trash slot*: padded gathers read it, padded bodies write
+it back, padded messages land in the receiver's trash. Real slots are never
+aliased with trash, so garbage cannot contaminate results.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Callable, Dict, Hashable, List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .discovery import PTG, WavefrontSchedule, discover
+
+K = Hashable
+B = Hashable  # block id
+
+
+@dataclass(frozen=True)
+class BlockPTGSpec:
+    """Application -> executor contract for a block-structured PTG."""
+
+    ptg: PTG
+    seeds: Sequence[K]
+    n_shards: int
+    block_shape: Tuple[int, int]
+    block_of: Callable[[K], B]            # block written by task k
+    operands: Callable[[K], Sequence[B]]  # blocks read by k (fixed arity per type)
+    owner: Callable[[B], int]             # shard owning block b
+    dtype: object = jnp.float32
+
+
+@dataclass
+class BlockProgram:
+    """Host-built schedule-as-data, ready to lower."""
+
+    spec: BlockPTGSpec
+    schedule: WavefrontSchedule
+    slot_of: Dict[B, Tuple[int, int]]       # block -> (owner shard, slot)
+    halo_slot: Dict[Tuple[int, B], int]     # (shard, block) -> halo copy slot
+    n_slots: int                            # incl. trash slot (last)
+    types: List[str]
+    arity: Dict[str, int]
+    # tables[w][t] = (ops_idx [n_shards, T, arity], out_idx [n_shards, T])
+    tables: List[Dict[str, Tuple[np.ndarray, np.ndarray]]]
+    # exchange[w] = (send_idx [src, dst, M], recv_idx [dst, src, M])
+    exchange: List[Tuple[np.ndarray, np.ndarray]]
+
+    # ------------------------------------------------------------ packing
+
+    @property
+    def trash(self) -> int:
+        return self.n_slots - 1
+
+    def pack(self, blocks: Dict[B, np.ndarray]) -> np.ndarray:
+        """Host layout: {block id: array} -> [n_shards, n_slots, b0, b1]."""
+        b0, b1 = self.spec.block_shape
+        out = np.zeros((self.spec.n_shards, self.n_slots, b0, b1),
+                       dtype=np.dtype(jnp.dtype(self.spec.dtype)))
+        for blk, arr in blocks.items():
+            s, slot = self.slot_of[blk]
+            out[s, slot] = arr
+        return out
+
+    def unpack(self, packed) -> Dict[B, np.ndarray]:
+        packed = np.asarray(packed)
+        return {blk: packed[s, slot] for blk, (s, slot) in self.slot_of.items()}
+
+    # ------------------------------------------------------------- stats
+
+    def comm_stats(self) -> dict:
+        """Bytes on the wire per wavefront — feeds the roofline's collective
+        term and the §Perf iteration log."""
+        b0, b1 = self.spec.block_shape
+        block_bytes = b0 * b1 * np.dtype(jnp.dtype(self.spec.dtype)).itemsize
+        per_wave = []
+        for send, _ in self.exchange:
+            real = int((send != self.n_slots - 1).sum())
+            padded = int(np.prod(send.shape))
+            per_wave.append({"real_blocks": real, "padded_blocks": padded})
+        return {
+            "block_bytes": block_bytes,
+            "wavefronts": len(self.exchange),
+            "real_bytes": sum(w["real_blocks"] for w in per_wave) * block_bytes,
+            "padded_bytes": sum(w["padded_blocks"] for w in per_wave) * block_bytes,
+            "per_wavefront": per_wave,
+        }
+
+    # ----------------------------------------------------------- lowering
+
+    def executor(
+        self,
+        bodies: Dict[str, Callable[..., jnp.ndarray]],
+        mesh: Mesh,
+        axis: str = "shards",
+        *,
+        scan: bool = True,
+    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """Build the jittable SPMD executor.
+
+        ``bodies[t](*operand_blocks) -> out_block`` — pure per-block compute
+        (jnp or a Pallas kernel). ``scan=True`` pads tables to uniform shapes
+        and scans over wavefronts (small HLO — deep schedules);
+        ``scan=False`` unrolls and skips empty types/exchanges per wavefront
+        (tight comm — shallow schedules).
+
+        Input/output: ``blocks [n_shards, n_slots, b0, b1]`` sharded P(axis).
+        """
+        n = self.spec.n_shards
+        if mesh.shape[axis] != n:
+            raise ValueError(f"mesh axis {axis}={mesh.shape[axis]} != {n} shards")
+
+        def wavefront_compute(local, tbl):
+            # local: [n_slots, b0, b1]; tbl[t] = (ops_idx [T, ar], out_idx [T])
+            for t in self.types:
+                if t not in tbl or tbl[t][0].shape[0] == 0:
+                    continue
+                ops_idx, out_idx = tbl[t]
+                ops = local[ops_idx]                 # [T, arity, b0, b1]
+                res = jax.vmap(lambda o, _t=t: bodies[_t](*jnp.unstack(o)))(ops)
+                local = local.at[out_idx].set(res.astype(local.dtype))
+            return local
+
+        def wavefront_exchange(local, send_idx, recv_idx):
+            # send_idx: [n_dst, M] my blocks for each dst;
+            # recv_idx: [n_src, M] where arrivals from each src land.
+            buf = local[send_idx]                    # [n, M, b0, b1]
+            buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                                     tiled=True)     # row j <- from shard j
+            return local.at[recv_idx.reshape(-1)].set(
+                buf.reshape(-1, *local.shape[1:]))
+
+        if scan:
+            W = len(self.tables)
+            ar = self.arity
+            T_max = {t: max((self.tables[w][t][0].shape[1]
+                             if t in self.tables[w] else 0) for w in range(W))
+                     for t in self.types}
+            M_max = max((e[0].shape[-1] for e in self.exchange), default=0)
+            # Stack tables shard-major: [n_shards, W, ...]; a single P(axis)
+            # sharding then hands each shard exactly its own rows.
+            tabs_np: Dict[str, np.ndarray] = {}
+            for t in self.types:
+                if T_max[t] == 0:
+                    continue
+                ops = np.full((W, n, T_max[t], ar[t]), self.trash, np.int32)
+                out = np.full((W, n, T_max[t]), self.trash, np.int32)
+                for w in range(W):
+                    if t in self.tables[w]:
+                        o, u = self.tables[w][t]
+                        ops[w, :, : o.shape[1]] = o
+                        out[w, :, : u.shape[1]] = u
+                tabs_np[f"{t}:ops"] = np.swapaxes(ops, 0, 1).copy()
+                tabs_np[f"{t}:out"] = np.swapaxes(out, 0, 1).copy()
+            if M_max:
+                send = np.full((W, n, n, M_max), self.trash, np.int32)
+                recv = np.full((W, n, n, M_max), self.trash, np.int32)
+                for w, (s_i, r_i) in enumerate(self.exchange):
+                    send[w, :, :, : s_i.shape[-1]] = s_i
+                    recv[w, :, :, : r_i.shape[-1]] = r_i
+                tabs_np["send"] = np.swapaxes(send, 0, 1).copy()
+                tabs_np["recv"] = np.swapaxes(recv, 0, 1).copy()
+
+            def run(local, tabs):
+                # local: [1, n_slots, b0, b1]; tabs: {k: [1, W, ...]}
+                tabs0 = {k: v[0] for k, v in tabs.items()}  # [W, ...]
+
+                def step(loc, wtab):
+                    loc0 = loc[0]
+                    tbl = {t: (wtab[f"{t}:ops"], wtab[f"{t}:out"])
+                           for t in self.types if f"{t}:ops" in wtab}
+                    loc0 = wavefront_compute(loc0, tbl)
+                    if M_max:
+                        loc0 = wavefront_exchange(loc0, wtab["send"],
+                                                  wtab["recv"])
+                    return loc0[None], None
+
+                local, _ = jax.lax.scan(step, local, tabs0)
+                return local
+
+            shmapped = jax.shard_map(
+                run, mesh=mesh,
+                in_specs=(P(axis), {k: P(axis) for k in tabs_np}),
+                out_specs=P(axis))
+
+            def entry(blocks):
+                return shmapped(
+                    blocks, {k: jnp.asarray(v) for k, v in tabs_np.items()})
+
+            return entry
+
+        # ------------------------------------------------- unrolled variant
+        def run_unrolled(local):
+            loc0 = local[0]
+            idx = jax.lax.axis_index(axis)
+            for w in range(len(self.tables)):
+                tbl = {t: (jnp.asarray(o)[idx], jnp.asarray(u)[idx])
+                       for t, (o, u) in self.tables[w].items()}
+                loc0 = wavefront_compute(loc0, tbl)
+                s_i, r_i = self.exchange[w]
+                if s_i.shape[-1]:
+                    loc0 = wavefront_exchange(
+                        loc0, jnp.asarray(s_i)[idx], jnp.asarray(r_i)[idx])
+            return loc0[None]
+
+        return jax.shard_map(run_unrolled, mesh=mesh, in_specs=(P(axis),),
+                             out_specs=P(axis))
+
+
+def build_block_program(spec: BlockPTGSpec) -> BlockProgram:
+    """Discover the schedule and build all index tables (host side, numpy)."""
+    ptg, n = spec.ptg, spec.n_shards
+    sched = discover(ptg, spec.seeds, n)
+    sched.validate(ptg)
+
+    # --- slot assignment: owned blocks first, then halo copies, then trash.
+    owned: List[List[B]] = [[] for _ in range(n)]
+    seen: set = set()
+    all_tasks = [k for s in sched.shards for wf in s.wavefronts for k in wf]
+    for k in all_tasks:
+        for blk in list(spec.operands(k)) + [spec.block_of(k)]:
+            if blk not in seen:
+                seen.add(blk)
+                owned[spec.owner(blk) % n].append(blk)
+    for k in all_tasks:  # "owner computes" rule
+        if spec.owner(spec.block_of(k)) % n != ptg.mapping(k) % n:
+            raise ValueError(
+                f"task {k!r} writes block {spec.block_of(k)!r} it does not own")
+
+    halo_needed: Dict[int, List[B]] = defaultdict(list)
+    writer_count: Dict[B, int] = defaultdict(int)
+    messaged: set = set()
+    for k in all_tasks:
+        writer_count[spec.block_of(k)] += 1
+        s = ptg.mapping(k) % n
+        for blk in spec.operands(k):
+            if spec.owner(blk) % n != s and blk not in halo_needed[s]:
+                halo_needed[s].append(blk)
+                messaged.add(blk)
+    for blk in messaged:
+        if writer_count[blk] > 1:
+            raise ValueError(
+                f"block {blk!r} crosses shards but has {writer_count[blk]} "
+                "writers (communicated blocks must be single-assignment)")
+
+    # Every remote read must be fed by a *direct* in-dep edge from the
+    # block's writer — that edge is what carries the payload (the AM). A
+    # remote read with no such edge would never be delivered.
+    for k in all_tasks:
+        s = ptg.mapping(k) % n
+        producers = {spec.block_of(d) for d in ptg.in_deps(k)}
+        for blk in spec.operands(k):
+            if spec.owner(blk) % n != s and blk not in producers:
+                raise ValueError(
+                    f"task {k!r} reads remote block {blk!r} but no in-dep "
+                    "produces it (missing send edge in the PTG)")
+
+    slot_of: Dict[B, Tuple[int, int]] = {}
+    halo_slot: Dict[Tuple[int, B], int] = {}
+    counts = []
+    for s in range(n):
+        slot = 0
+        for blk in owned[s]:
+            slot_of[blk] = (s, slot)
+            slot += 1
+        for blk in halo_needed[s]:
+            halo_slot[(s, blk)] = slot
+            slot += 1
+        counts.append(slot)
+    n_slots = max(counts) + 1  # + trash
+    trash = n_slots - 1
+
+    def local_slot(s: int, blk: B) -> int:
+        os_, slot = slot_of[blk]
+        return slot if os_ == s else halo_slot[(s, blk)]
+
+    # --- task type metadata
+    types = sorted({ptg.type_of(k) for k in all_tasks})
+    arity: Dict[str, int] = {}
+    for k in all_tasks:
+        t = ptg.type_of(k)
+        a = len(spec.operands(k))
+        if arity.setdefault(t, a) != a:
+            raise ValueError(f"type {t!r} has inconsistent arity")
+
+    # --- per-wavefront compute tables
+    W = sched.n_wavefronts
+    tables: List[Dict[str, Tuple[np.ndarray, np.ndarray]]] = []
+    for w in range(W):
+        by_shard_type: Dict[str, List[List[K]]] = defaultdict(
+            lambda: [[] for _ in range(n)])
+        for s in range(n):
+            for k in sched.shards[s].wavefronts[w]:
+                by_shard_type[ptg.type_of(k)][s].append(k)
+        tbl: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        for t, rows in by_shard_type.items():
+            T = max(len(r) for r in rows)
+            if T == 0:
+                continue
+            ops = np.full((n, T, arity[t]), trash, np.int32)
+            out = np.full((n, T), trash, np.int32)
+            for s in range(n):
+                outs = [local_slot(s, spec.block_of(k)) for k in rows[s]]
+                assert len(set(outs)) == len(outs), (
+                    f"wavefront {w} shard {s}: duplicate output slots")
+                for i, k in enumerate(rows[s]):
+                    for j, blk in enumerate(spec.operands(k)):
+                        ops[s, i, j] = local_slot(s, blk)
+                    out[s, i] = outs[i]
+            tbl[t] = (ops, out)
+        tables.append(tbl)
+
+    # --- per-wavefront exchange tables (fused per (src, dst) — "large AMs")
+    exchange: List[Tuple[np.ndarray, np.ndarray]] = []
+    for w in range(W):
+        groups = sched.messages.get(w, {})
+        per_pair: Dict[Tuple[int, int], List[B]] = {}
+        for (src, dst), msgs in groups.items():
+            # Only data-carrying edges ride the wire (control-only edges are
+            # implied by wavefront ordering). Multiple consumers of a block
+            # on the same dst share one copy.
+            blks = sorted(
+                {spec.block_of(m.src_task) for m in msgs
+                 if spec.block_of(m.src_task) in set(spec.operands(m.dst_task))},
+                key=repr)
+            if blks:
+                per_pair[(src, dst)] = blks
+        M = max((len(v) for v in per_pair.values()), default=0)
+        send = np.full((n, n, M), trash, np.int32)   # [src, dst, m]
+        recv = np.full((n, n, M), trash, np.int32)   # [dst, src, m]
+        for (src, dst), blks in per_pair.items():
+            for m, blk in enumerate(blks):
+                send[src, dst, m] = local_slot(src, blk)
+                recv[dst, src, m] = halo_slot[(dst, blk)]
+        exchange.append((send, recv))
+
+    return BlockProgram(spec, sched, slot_of, halo_slot, n_slots, types,
+                        arity, tables, exchange)

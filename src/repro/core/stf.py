@@ -1,0 +1,104 @@
+"""Sequential Task Flow (STF) baseline — the StarPU-style comparison point.
+
+The paper's central comparison (§I-B, §III) is PTG vs STF: an STF runtime
+discovers the DAG by *sequentially* enumerating tasks with data-access modes
+(READ / WRITE / READWRITE) and inferring dependencies from last-writer /
+reader sets. This file implements that model on top of the same
+work-stealing threadpool, so benchmark deltas isolate the *DAG-discovery
+strategy*, not the executor:
+
+- task submission is single-threaded and builds the explicit DAG up front
+  (the O(global DAG) cost the PTG avoids);
+- every rank in a distributed STF run enumerates the *full* DAG (as StarPU's
+  MPI mode does), while the PTG discovers only its local slice.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Hashable, List, Sequence
+
+from .threadpool import Task, Threadpool
+
+READ, WRITE, READWRITE = "R", "W", "RW"
+
+
+@dataclass
+class _Node:
+    fn: Callable[[], None]
+    indegree: int = 0
+    out: List["_Node"] = field(default_factory=list)
+    priority: float = 0.0
+    mapping: int = 0
+
+
+class STFGraph:
+    """Sequential-semantics task submission with inferred dependencies."""
+
+    def __init__(self, tp: Threadpool):
+        self.tp = tp
+        self._nodes: List[_Node] = []
+        self._last_writer: Dict[Hashable, _Node] = {}
+        self._readers_since_write: Dict[Hashable, List[_Node]] = {}
+        self._lock = threading.Lock()
+        self._remaining = 0
+
+    def submit(
+        self,
+        fn: Callable[[], None],
+        accesses: Sequence[tuple],  # (data_key, mode)
+        *,
+        priority: float = 0.0,
+        mapping: int = 0,
+    ) -> None:
+        """Sequentially declare one task; dependencies are inferred (RAW,
+        WAR, WAW hazards) from the access modes — StarPU's data model."""
+        node = _Node(fn, priority=priority, mapping=mapping)
+        deps: set = set()
+        for key, mode in accesses:
+            if mode in (READ, READWRITE):
+                w = self._last_writer.get(key)
+                if w is not None:
+                    deps.add(id(w)); w.out.append(node)           # RAW
+            if mode in (WRITE, READWRITE):
+                for r in self._readers_since_write.get(key, []):
+                    if r is not node:
+                        deps.add(id(r)); r.out.append(node)       # WAR
+                w = self._last_writer.get(key)
+                if w is not None and id(w) not in deps:
+                    deps.add(id(w)); w.out.append(node)           # WAW
+                self._last_writer[key] = node
+                self._readers_since_write[key] = []
+            if mode in (READ, READWRITE):
+                self._readers_since_write.setdefault(key, []).append(node)
+        node.indegree = len(deps)
+        self._nodes.append(node)
+
+    def execute(self) -> None:
+        """Release roots, run the whole DAG, block until done."""
+        self._remaining = len(self._nodes)
+        done = threading.Event()
+        lock = threading.Lock()
+
+        def run_node(node: _Node) -> None:
+            node.fn()
+            for succ in node.out:
+                with lock:
+                    succ.indegree -= 1
+                    ready = succ.indegree == 0
+                if ready:
+                    self.tp.insert(Task(run=lambda s=succ: run_node(s),
+                                        priority=succ.priority), succ.mapping)
+            with lock:
+                self._remaining -= 1
+                if self._remaining == 0:
+                    done.set()
+
+        roots = [n for n in self._nodes if n.indegree == 0]
+        if not self._nodes:
+            return
+        for n in roots:
+            self.tp.insert(Task(run=lambda s=n: run_node(s), priority=n.priority),
+                           n.mapping)
+        done.wait()

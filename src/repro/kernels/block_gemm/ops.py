@@ -1,0 +1,30 @@
+"""Public jit'd wrapper for the block GEMM kernel.
+
+On CPU (this container) the Pallas body runs in interpret mode for
+validation; on TPU it compiles to Mosaic. `matmul` auto-selects and falls
+back to the jnp oracle for shapes that do not tile cleanly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .block_gemm import block_gemm
+from .ref import block_gemm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 256, bn: int = 256,
+           bk: int = 256) -> jnp.ndarray:
+    """Drop-in `a @ b` with the Pallas path where it applies."""
+    m, k = a.shape
+    _, n = b.shape
+    tiles_ok = (m % min(bm, m) == 0 and n % min(bn, n) == 0
+                and k % min(bk, k) == 0 and m >= 8 and n >= 128 and k >= 8)
+    if _on_tpu() and tiles_ok:
+        return block_gemm(a, b, bm=bm, bn=bn, bk=bk)
+    return block_gemm_ref(a, b)

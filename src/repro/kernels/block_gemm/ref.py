@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the block GEMM kernel."""
+
+import jax.numpy as jnp
+
+
+def block_gemm_ref(a: jnp.ndarray, b: jnp.ndarray,
+                   acc_dtype=jnp.float32) -> jnp.ndarray:
+    """C = A @ B with f32 accumulation; result in A's dtype."""
+    return jnp.dot(a, b, preferred_element_type=acc_dtype).astype(a.dtype)

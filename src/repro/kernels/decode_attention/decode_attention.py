@@ -1,0 +1,105 @@
+"""Flash-decoding GQA attention — Pallas TPU kernel for the decode shapes.
+
+One new token attends to an S-long KV cache (decode_32k / long_500k cells):
+pure memory-bound reduction over the cache, so the kernel's job is to
+stream K/V through VMEM exactly once at full HBM bandwidth while the whole
+q-head *group* of a KV head rides along ([group, D] tile — the GQA analogue
+of flash-decoding's head batching; the group dimension feeds the MXU).
+
+Grid = (B·Hkv, S/bs) with the cache-block dimension innermost (sequential);
+online-softmax state (m, l, acc) carried in VMEM scratch. A ragged cache
+length per batch row masks dead positions in-kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, s_steps: int, bs: int,
+                   hkv: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    batch = pl.program_id(0) // hkv
+    kv_len = lens_ref[batch]
+    s0 = si * bs
+
+    @pl.when(s0 < kv_len)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)            # [group, d]
+        k = k_ref[0].astype(jnp.float32)            # [bs, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = s0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)            # [bs, d]
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(si == s_steps - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: jnp.ndarray | None = None, *, bs: int = 512,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, D]; k/v: [B, Hkv, S, D]; kv_len: int32 [B] or None."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    bs = min(bs, s)
+    assert s % bs == 0, (s, bs)
+    s_steps = s // bs
+    if kv_len is None:
+        kv_len = jnp.full((b,), s, jnp.int32)
+
+    qf = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hkv, s_steps),
+        in_specs=[
+            pl.BlockSpec((1, group, d), lambda h, si, lens: (h, 0, 0)),
+            pl.BlockSpec((1, bs, d), lambda h, si, lens: (h, si, 0)),
+            pl.BlockSpec((1, bs, d), lambda h, si, lens: (h, si, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group, d), lambda h, si, lens: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=d ** -0.5, s_steps=s_steps,
+                          bs=bs, hkv=hkv),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(b, hq, d)

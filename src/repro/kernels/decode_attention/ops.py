@@ -1,0 +1,18 @@
+"""Public jit'd wrapper for decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention
+from .ref import decode_ref
+
+
+def decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           kv_len: jnp.ndarray | None = None, *, bs: int = 512) -> jnp.ndarray:
+    """Single-token GQA decode; Pallas on TPU, jnp oracle elsewhere."""
+    s = k.shape[2]
+    if jax.default_backend() == "tpu" and s % min(bs, s) == 0:
+        return decode_attention(q, k, v, kv_len, bs=bs)
+    return decode_ref(q, k, v, kv_len)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+               kv_len=None) -> jnp.ndarray:
+    """q: [B, Hq, D] (one new token); k/v: [B, Hkv, S, D]; optional kv_len
+    [B] masks positions >= kv_len (ragged cache)."""
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * (d ** -0.5)
+    if kv_len is not None:
+        mask = jnp.arange(s)[None, None, :] < kv_len[:, None, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", probs,
+                      vx.astype(jnp.float32)).astype(q.dtype)

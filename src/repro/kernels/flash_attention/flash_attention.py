@@ -1,0 +1,117 @@
+"""Causal GQA flash attention (forward) — Pallas TPU kernel.
+
+IO-aware attention for the prefill shapes: never materializes the [Lq, Lk]
+score matrix in HBM. Grid = (batch·q_heads, Lq/bq, Lk/bk) with the KV block
+dimension innermost (sequential), carrying the online-softmax state
+(running max m, normalizer l, unnormalized accumulator acc) in VMEM scratch
+across KV steps — the standard FlashAttention recurrence re-tiled for the
+TPU memory hierarchy (HBM -> VMEM tiles -> MXU for the two matmuls, VPU for
+the rescaling).
+
+GQA is folded into the BlockSpec index maps: the q-head axis indexes K/V by
+`h // group`, so no repeated KV ever leaves HBM. Causal masking skips fully
+masked KV blocks via a cheap in-kernel predicate (the grid is still dense —
+Mosaic handles `pl.when` efficiently; a sparse grid is a further
+optimization recorded in EXPERIMENTS §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, kv_steps: int, bq: int, bk: int,
+               lk: int, lq: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions (queries are the trailing lq positions of lk)
+    q_start = qi * bq + (lk - lq)
+    k_start = ki * bk
+
+    run = (not causal) or (k_start <= q_start + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)               # [bq, d]
+        k = k_ref[0].astype(jnp.float32)               # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]                            # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # [bq, bk]
+        alpha = jnp.exp(m_prev - m_new)                # [bq, 1]
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)               # [bk, d]
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, bq: int = 512, bk: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hq, Lq, D]; k/v: [B, Hkv, Lk, D] -> [B, Hq, Lq, D]."""
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    bq, bk = min(bq, lq), min(bk, lk)
+    assert lq % bq == 0 and lk % bk == 0, (lq, bq, lk, bk)
+    scale = d ** -0.5
+    kv_steps = lk // bk
+
+    qf = q.reshape(b * hq, lq, d)
+    kf = k.reshape(b * hkv, lk, d)
+    vf = v.reshape(b * hkv, lk, d)
+
+    def q_map(h, qi, ki):
+        return (h, qi, 0)
+
+    def kv_map(h, qi, ki):
+        return (h // group, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_fa_kernel, scale=scale, causal=causal,
+                          kv_steps=kv_steps, bq=bq, bk=bk, lk=lk, lq=lq),
+        grid=(b * hq, lq // bq, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, lq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # normalizer
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, lq, d)

@@ -1,0 +1,19 @@
+"""Public jit'd wrapper for flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .ref import mha_ref
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, bq: int = 512, bk: int = 512) -> jnp.ndarray:
+    """Causal GQA attention; Pallas on TPU, jnp oracle elsewhere."""
+    lq, lk = q.shape[2], k.shape[2]
+    tiles_ok = lq % min(bq, lq) == 0 and lk % min(bk, lk) == 0
+    if jax.default_backend() == "tpu" and tiles_ok:
+        return flash_attention(q, k, v, causal=causal, bq=bq, bk=bk)
+    return mha_ref(q, k, v, causal=causal)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    """q: [B, Hq, Lq, D]; k/v: [B, Hkv, Lk, D]; Hq % Hkv == 0 (GQA).
+
+    Softmax in f32 regardless of input dtype (matches the kernel).
+    """
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kx.astype(jnp.float32)) * scale
+    if causal:
+        # queries are the last lq positions of the lk-long sequence
+        qpos = jnp.arange(lq)[:, None] + (lk - lq)
+        kpos = jnp.arange(lk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      vx.astype(jnp.float32)).astype(q.dtype)

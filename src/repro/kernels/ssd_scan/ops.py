@@ -1,0 +1,20 @@
+"""Public jit'd wrapper for the SSD scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssd_chunked_ref, ssd_ref
+from .ssd_scan import ssd_scan
+
+
+def ssd(x, dt, a, b, c, d=None, *, q_chunk: int = 128) -> jnp.ndarray:
+    """Mamba-2 SSD. Pallas chunked kernel on TPU (serve); differentiable
+    chunked-jnp elsewhere / for training; token recurrence as last resort."""
+    l = x.shape[1]
+    if l % min(q_chunk, l) == 0:
+        if jax.default_backend() == "tpu":
+            return ssd_scan(x, dt, a, b, c, d, q_chunk=q_chunk)
+        return ssd_chunked_ref(x, dt, a, b, c, d, q_chunk=q_chunk)
+    return ssd_ref(x, dt, a, b, c, d)

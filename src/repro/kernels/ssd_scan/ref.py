@@ -1,0 +1,97 @@
+"""Pure-jnp oracle for the Mamba-2 SSD scan (sequential recurrence).
+
+State h_t [N, P] per (batch, head):
+
+    h_t = exp(dt_t · A_h) · h_{t-1} + B_t ⊗ (dt_t · x_t)
+    y_t = C_t · h_t  (+ D_h · x_t)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+            c: jnp.ndarray, d: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x: [B, L, H, P]; dt: [B, L, H]; a: [H] (negative);
+    b/c: [B, L, G, N] with H % G == 0; d: [H] or None -> y: [B, L, H, P]."""
+    bsz, l, h, p = x.shape
+    _, _, g, n = b.shape
+    rep = h // g
+    bx = jnp.repeat(b, rep, axis=2)          # [B, L, H, N]
+    cx = jnp.repeat(c, rep, axis=2)
+
+    da = dt * a[None, None, :]               # [B, L, H]
+    xdt = x * dt[..., None]                  # [B, L, H, P]
+
+    def step(hstate, inp):
+        da_t, b_t, c_t, xdt_t = inp
+        hstate = (jnp.exp(da_t)[..., None, None] * hstate
+                  + b_t[..., :, None] * xdt_t[..., None, :])
+        y_t = jnp.einsum("bhn,bhnp->bhp", c_t, hstate)
+        return hstate, y_t
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    inputs = (da.transpose(1, 0, 2).astype(jnp.float32),
+              bx.transpose(1, 0, 2, 3).astype(jnp.float32),
+              cx.transpose(1, 0, 2, 3).astype(jnp.float32),
+              xdt.transpose(1, 0, 2, 3).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, inputs)
+    y = ys.transpose(1, 0, 2, 3)             # [B, L, H, P]
+    if d is not None:
+        y = y + x.astype(jnp.float32) * d[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_chunked_ref(x, dt, a, b, c, d=None, *, q_chunk: int = 128):
+    """Differentiable pure-jnp port of the *chunked* SSD algorithm (the same
+    math as the Pallas kernel): O(L/Q) sequential steps of chunk-level
+    matmuls instead of an L-step token recurrence. This is the production
+    train/prefill path; `ssd_ref` stays as the independent oracle."""
+    bsz, l, h, p = x.shape
+    _, _, g, n = b.shape
+    rep = h // g
+    q = min(q_chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    bx = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    cx = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    da = (dt.astype(jnp.float32) * a[None, None, :]) \
+        .reshape(bsz, nc, q, h)
+    xdt = (x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]) \
+        .reshape(bsz, nc, q, h, p)
+    bxc = bx.reshape(bsz, nc, q, h, n)
+    cxc = cx.reshape(bsz, nc, q, h, n)
+
+    iota = jnp.arange(q)
+    tri = iota[:, None] >= iota[None, :]                      # j <= i
+
+    def chunk_step(state, inp):
+        da_c, b_c, c_c, xdt_c = inp                 # [B,q,H], [B,q,H,N], ...
+        cum = jnp.cumsum(da_c, axis=1)              # [B, q, H]
+        lmat = jnp.where(tri[None, :, :, None],
+                         jnp.exp(cum[:, :, None] - cum[:, None, :]), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", c_c, b_c) * lmat
+        y = jnp.einsum("bijh,bjhp->bihp", scores, xdt_c)
+        y += jnp.einsum("bihn,bhnp->bihp",
+                        c_c * jnp.exp(cum)[..., None], state)
+        decay_rest = jnp.exp(cum[:, -1:, :] - cum)  # [B, q, H]
+        state = (jnp.exp(cum[:, -1, :])[..., None, None] * state
+                 + jnp.einsum("bjhn,bjhp->bhnp",
+                              b_c, xdt_c * decay_rest[..., None]))
+        return state, y
+
+    from repro.launch.flags import scan_unroll_arg
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), h0,
+        (da.transpose(1, 0, 2, 3), bxc.transpose(1, 0, 2, 3, 4),
+         cxc.transpose(1, 0, 2, 3, 4), xdt.transpose(1, 0, 2, 3, 4)),
+        unroll=scan_unroll_arg())
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, l, h, p)
+    if d is not None:
+        y = y + x.astype(jnp.float32) * d[None, None, :, None]
+    return y.astype(x.dtype)

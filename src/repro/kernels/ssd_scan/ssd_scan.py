@@ -1,0 +1,109 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+The SSD duality turns the token-by-token recurrence into chunk-level
+matmuls (MXU food) plus an O(L/Q) sequential state hand-off:
+
+    per chunk (Q tokens), with cum = cumsum(dt·A) over the chunk:
+      intra:  Y  = ((C Bᵀ) ⊙ L) · (dt·x)      L_ij = exp(cum_i − cum_j), j ≤ i
+      inter:  Y += (C ⊙ exp(cum)) · h
+      state:  h  = exp(cum_Q) · h + Bᵀ · ((dt·x) ⊙ exp(cum_Q − cum))
+
+Grid = (B·H, L/Q) with the chunk dimension innermost (sequential); the
+[N, P] state lives in VMEM scratch across chunks — the recurrence never
+round-trips HBM. B/C tensors stay grouped ([B·G, L, N]); the head→group
+indirection happens in the BlockSpec index map exactly like GQA in the
+attention kernels. dt·x and dt·A are cheap elementwise precomputes fused by
+XLA outside the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, da_ref, b_ref, c_ref, y_ref, state_ref, *,
+                q_chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xdt = xdt_ref[0].astype(jnp.float32)          # [Q, P]
+    da = da_ref[0].astype(jnp.float32)            # [Q]
+    bmat = b_ref[0].astype(jnp.float32)           # [Q, N]
+    cmat = c_ref[0].astype(jnp.float32)           # [Q, N]
+
+    cum = jnp.cumsum(da)                          # [Q], inclusive
+    # decay matrix L_ij = exp(cum_i - cum_j) for j <= i else 0
+    li = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 1)
+    lmat = jnp.where(iota_j <= iota_i, jnp.exp(li), 0.0)
+
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * lmat
+    y = jax.lax.dot(scores, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: carried state
+    y += jax.lax.dot(cmat * jnp.exp(cum)[:, None], state_ref[...],
+                     preferred_element_type=jnp.float32)
+
+    # state update
+    decay_rest = jnp.exp(cum[-1] - cum)           # [Q]
+    state_ref[...] = (jnp.exp(cum[-1]) * state_ref[...]
+                      + jax.lax.dot_general(
+                          bmat, xdt * decay_rest[:, None],
+                          (((0,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, d: jnp.ndarray | None = None,
+             *, q_chunk: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """x: [B, L, H, P]; dt: [B, L, H]; a: [H]; b/c: [B, L, G, N]; d: [H]."""
+    bsz, l, h, p = x.shape
+    _, _, g, n = b.shape
+    assert h % g == 0
+    rep = h // g
+    q_chunk = min(q_chunk, l)
+    assert l % q_chunk == 0, (l, q_chunk)
+    chunks = l // q_chunk
+
+    xdt = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(bsz * h, l, p)
+    da = (dt * a[None, None, :]).transpose(0, 2, 1).reshape(bsz * h, l)
+    bf = b.transpose(0, 2, 1, 3).reshape(bsz * g, l, n)
+    cf = c.transpose(0, 2, 1, 3).reshape(bsz * g, l, n)
+
+    def xmap(i, ci):
+        return (i, ci, 0)
+
+    def bcmap(i, ci):
+        # head -> group indirection: i = batch*h + head
+        return ((i // h) * g + (i % h) // rep, ci, 0)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, q_chunk=q_chunk),
+        grid=(bsz * h, chunks),
+        in_specs=[
+            pl.BlockSpec((1, q_chunk, p), xmap),
+            pl.BlockSpec((1, q_chunk), lambda i, ci: (i, ci)),
+            pl.BlockSpec((1, q_chunk, n), bcmap),
+            pl.BlockSpec((1, q_chunk, n), bcmap),
+        ],
+        out_specs=pl.BlockSpec((1, q_chunk, p), xmap),
+        out_shape=jax.ShapeDtypeStruct((bsz * h, l, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(xdt, da, bf, cf)
+    y = y.reshape(bsz, h, l, p).transpose(0, 2, 1, 3)
+    if d is not None:
+        y = y + (x * d[None, None, :, None]).astype(y.dtype)
+    return y

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: the jit'd
+step (train/prefill/serve per shape kind) must lower and compile against
+the production mesh with ShapeDtypeStruct inputs. Emits one JSON per cell:
+memory_analysis (fits-or-not per device), cost_analysis (FLOPs/bytes for
+§Roofline), and collective bytes parsed from the partitioned HLO.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi-6b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all [--multi-pod]   # sweep (sequential)
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.configs.base import SHAPES, shapes_for          # noqa: E402
+from repro.configs.registry import all_archs, get_config   # noqa: E402
+from repro.dist.ctx import set_batch_axes, set_seq_shard, use_mesh  # noqa: E402
+from repro.dist.sharding import batch_axis                 # noqa: E402
+from repro.launch.mesh import make_production_mesh         # noqa: E402
+from repro.launch.specs import input_specs                 # noqa: E402
+from repro.serve.decode import make_prefill_step, make_serve_step  # noqa: E402
+from repro.train.train_step import make_train_step         # noqa: E402
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _result_bytes(line: str, kind: str) -> int:
+    """Sum byte sizes of the op's result type(s): the text between `=` and
+    the op name, e.g. `%ar = (bf16[128,512], bf16[64]) all-reduce(...)`."""
+    if "=" not in line:
+        return 0
+    rhs = line.split("=", 1)[1]
+    head = rhs.split(f" {kind}", 1)[0]
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(head):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective wire bytes (per device), from the partitioned HLO.
+
+    Result-shape bytes approximate bytes moved per device; all-reduce counts
+    2x (ring reduce-scatter + all-gather). `fusion`-wrapped collectives do
+    not occur post-SPMD for these ops.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") or " = " in s:
+            for kind in _COLLECTIVES:
+                # match op name, e.g. "all-reduce(" or "all-gather-start("
+                if f" {kind}(" in s or f" {kind}-start(" in s:
+                    nbytes = _result_bytes(s, kind)
+                    if kind == "all-reduce":
+                        nbytes *= 2
+                    out[kind] += nbytes
+                    counts[kind] += 1
+                    break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             unroll: bool = False) -> dict:
+    if unroll:
+        # exact costing pass: XLA counts while bodies once, so unroll all
+        # scans (see launch/flags.py); slower compile, exact flops/bytes/
+        # collectives
+        os.environ["REPRO_UNROLL_SCANS"] = "1"
+    cfg = get_config(arch)
+    cells = {c.name: c for c in shapes_for(cfg)}
+    if shape_name not in cells:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "long_500k needs sub-quadratic attention "
+                          "(full-attention arch; DESIGN.md §5)"}
+    cell = cells[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    if cell.kind == "train":
+        step = make_train_step(cfg)
+    elif cell.kind == "prefill":
+        step = make_prefill_step(cfg)
+    else:
+        step = make_serve_step(cfg)
+
+    t0 = time.time()
+    set_batch_axes(batch_axis(mesh, cell.global_batch))
+    set_seq_shard(cell.kind != "decode"
+                  and cell.seq_len % mesh.shape["model"] == 0)
+    # donate the training state / decode cache: the updated copy aliases the
+    # input buffer instead of double-buffering it (EXPERIMENTS §Perf A4)
+    donate = ()
+    if os.environ.get("REPRO_DONATE", "1") == "1":
+        donate = (0, 1) if cell.kind == "train" else \
+            ((2,) if cell.kind == "decode" else ())
+    with use_mesh(mesh):
+        args, arg_specs = input_specs(cfg, cell, mesh)
+        shardings = jax.tree.map(
+            lambda s: jax.sharding.NamedSharding(mesh, s), arg_specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        jitted = jax.jit(step, in_shardings=shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    n_chips = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape_name, "kind": cell.kind,
+        "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "status": "ok",
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "per_device": {
+            "flops": cost.get("flops", 0.0) if cost else None,
+            "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else None,
+            "transcendentals": cost.get("transcendentals", 0.0) if cost else 0,
+            "argument_bytes": mem.argument_size_in_bytes if mem else None,
+            "output_bytes": mem.output_size_in_bytes if mem else None,
+            "temp_bytes": mem.temp_size_in_bytes if mem else None,
+            "code_bytes": mem.generated_code_size_in_bytes if mem else None,
+            "alias_bytes": mem.alias_size_in_bytes if mem else None,
+            "collective_bytes": coll,
+        },
+        "n_chips": int(n_chips),
+        "hlo_lines": hlo.count("\n"),
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="exact-cost pass (unrolled scans)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="reports/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    cells = []
+    if args.all:
+        for arch in all_archs():
+            for cell in SHAPES:
+                cells.append((arch, cell.name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape in cells:
+        tag = "multi" if args.multi_pod else "pod"
+        if args.unroll:
+            tag += "_unrolled"
+        out = os.path.join(args.out_dir, f"{arch}__{shape}__{tag}.json")
+        if os.path.exists(out):
+            print(f"[skip existing] {out}", flush=True)
+            continue
+        print(f"[dryrun] {arch} x {shape} ({tag}) ...", flush=True)
+        try:
+            result = run_cell(arch, shape, args.multi_pod, args.unroll)
+        except Exception as e:  # recorded, sweep continues
+            result = {"arch": arch, "shape": shape, "status": "error",
+                      "error": repr(e),
+                      "trace": traceback.format_exc()[-3000:]}
+            failures += 1
+        with open(out, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"  -> {result['status']} "
+              f"({result.get('compile_s', '-')}s compile)", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

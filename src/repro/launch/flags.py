@@ -1,0 +1,42 @@
+"""Launch-time flags threaded to model internals via env vars.
+
+REPRO_UNROLL_SCANS=1 — unroll every lax.scan (layers + attention chunks).
+XLA's cost analysis counts a while-loop body ONCE regardless of trip count,
+so the dry-run compiles each cell twice: scan-form (production HLO: memory
+analysis, compile proof) and unrolled (exact FLOPs/bytes/collective counts
+for §Roofline). Verified empirically: scan(10 steps) and a single step
+report identical `flops`.
+"""
+
+import os
+
+
+def unroll_scans() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def scan_unroll_arg():
+    return True if unroll_scans() else 1
+
+
+# ---- §Perf hill-climbing knobs (env-set so dryrun cells A/B/C can sweep
+# them without config surgery; defaults = paper-faithful baseline) ----
+
+def remat_policy() -> str:
+    """none | full | dots — activation-checkpoint policy for layer scans."""
+    return os.environ.get("REPRO_REMAT", "full")
+
+
+def moe_capacity_factor():
+    v = os.environ.get("REPRO_MOE_CF")
+    return float(v) if v else None
+
+
+def ssd_chunk():
+    v = os.environ.get("REPRO_SSD_CHUNK")
+    return int(v) if v else None
+
+
+def attn_chunk():
+    v = os.environ.get("REPRO_ATTN_CHUNK")
+    return int(v) if v else None

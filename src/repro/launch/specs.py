@@ -1,0 +1,96 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation (the dry-run contract).
+
+``input_specs(cfg, cell)`` returns (args, arg_specs) for the step kind:
+- train:   (params, opt_state, batch)          -> train_step
+- prefill: (params, batch)                     -> prefill_step
+- decode:  (params, token, cache)              -> serve_step
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist.sharding import (batch_axis, cache_specs, param_specs,
+                                 sanitize_specs)
+from repro.models import transformer as tfm
+from repro.train.optimizer import make_optimizer, opt_state_specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    """(batch pytree of ShapeDtypeStruct, batch pytree of PartitionSpec)."""
+    b, s = cell.global_batch, cell.seq_len
+    bn = batch_axis(mesh, b)
+    batch: Dict[str, Any] = {}
+    spec: Dict[str, Any] = {}
+    if cfg.embed_inputs and cfg.family != "encdec":
+        batch["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        spec["embeds"] = P(bn, None, None)
+    elif cfg.family == "encdec":
+        batch["enc_embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+        spec["enc_embeds"] = P(bn, None, None)
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        spec["tokens"] = P(bn, None)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        spec["tokens"] = P(bn, None)
+    if cell.kind == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+        spec["labels"] = P(bn, None)
+    return batch, spec
+
+
+def abstract_state(cfg: ModelConfig):
+    params = tfm.abstract_params(cfg)
+    init_opt, _ = make_optimizer(cfg.optimizer)
+    opt = jax.eval_shape(init_opt, params)
+    return params, opt
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh
+                ) -> Tuple[tuple, tuple]:
+    """-> (abstract_args, arg_partition_specs) for the cell's step kind."""
+    model_axis = mesh.shape["model"]
+    params, opt = abstract_state(cfg)
+    p_specs = sanitize_specs(param_specs(cfg, model_axis=model_axis),
+                             params, mesh)
+    bn = batch_axis(mesh, cell.global_batch)
+
+    if cell.kind == "train":
+        batch, b_spec = batch_specs(cfg, cell, mesh)
+        o_specs = sanitize_specs(
+            opt_state_specs(p_specs, cfg.optimizer, params), opt, mesh)
+        return (params, opt, batch), (p_specs, o_specs, b_spec)
+
+    if cell.kind == "prefill":
+        batch, b_spec = batch_specs(cfg, cell, mesh)
+        return (params, batch), (p_specs, b_spec)
+
+    # decode: one new token against a seq_len-deep cache
+    b = cell.global_batch
+    enc_out = None
+    if cfg.family == "encdec":
+        hd, hkv = cfg.head_dim, cfg.n_kv_heads
+        enc_out = (_sds((cfg.n_layers, b, hkv, cell.seq_len, hd),
+                        jnp.bfloat16),
+                   _sds((cfg.n_layers, b, hkv, cell.seq_len, hd),
+                        jnp.bfloat16))
+    cache = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, b, cell.seq_len, enc_out=enc_out))
+    c_specs = sanitize_specs(
+        cache_specs(cfg, cache, bn, model_axis=model_axis), cache, mesh)
+    if cfg.embed_inputs and cfg.family != "encdec":
+        # decode follows a multimodal prefill; new steps are text tokens
+        token = _sds((b,), jnp.int32)
+    else:
+        token = _sds((b,), jnp.int32)
+    return (params, token, cache), (p_specs, P(bn), c_specs)

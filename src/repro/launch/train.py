@@ -1,0 +1,138 @@
+"""Production training launcher: mesh + shardings + elastic step loop.
+
+    python -m repro.launch.train --arch qwen3-14b --steps 1000 \
+        [--multi-pod] [--microbatch 4] [--ckpt-dir ...] [--host-devices N]
+
+On hardware this runs under one controller per host (jax.distributed);
+here `--host-devices N` forces N host devices so the full code path —
+production mesh, sharded state, donated step, async checkpointing,
+straggler monitor, elastic restart — executes identically at toy scale.
+"""
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="force N host devices (dev runs)")
+    ap.add_argument("--data", default=None)
+    ap.add_argument("--ckpt-dir", default="ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import reduced as reduce_cfg
+    from repro.configs.registry import get_config
+    from repro.dist.ctx import set_batch_axes, set_seq_shard, use_mesh
+    from repro.dist.sharding import batch_axis, param_specs, sanitize_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.train import checkpoint as ckpt
+    from repro.train.data import PackedBinaryDataset, SyntheticLM
+    from repro.train.elastic import StragglerDetector
+    from repro.train.optimizer import make_optimizer, opt_state_specs
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    seq = args.seq or (128 if args.reduced else 4096)
+    global_batch = args.global_batch or (8 if args.reduced else 256)
+
+    n_dev = len(jax.devices())
+    if n_dev >= 512 and args.multi_pod:
+        mesh = make_production_mesh(multi_pod=True)
+    elif n_dev >= 256:
+        mesh = make_production_mesh()
+    else:  # dev-scale mesh of the same shape family
+        model = max(1, min(4, n_dev))
+        mesh = jax.make_mesh((n_dev // model, model), ("data", "model"))
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+          f"arch={cfg.name} ({cfg.n_params() / 1e9:.2f}B params), "
+          f"seq={seq} batch={global_batch}")
+
+    set_batch_axes(batch_axis(mesh, global_batch))
+    set_seq_shard(seq % mesh.shape["model"] == 0)
+
+    with use_mesh(mesh):
+        p_abs = jax.eval_shape(
+            lambda: init_train_state(cfg, jax.random.key(0)))
+        p_specs = sanitize_specs(
+            param_specs(cfg, model_axis=mesh.shape["model"]), p_abs[0], mesh)
+        o_specs = sanitize_specs(
+            opt_state_specs(p_specs, cfg.optimizer, p_abs[0]), p_abs[1], mesh)
+        p_sh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), p_specs,
+                            is_leaf=lambda x: isinstance(
+                                x, jax.sharding.PartitionSpec))
+        o_sh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), o_specs,
+                            is_leaf=lambda x: isinstance(
+                                x, jax.sharding.PartitionSpec))
+
+        # init sharded (jit'd init writes each shard on its device)
+        params, opt_state = jax.jit(
+            lambda k: init_train_state(cfg, k),
+            out_shardings=(p_sh, o_sh))(jax.random.key(0))
+
+        start = 0
+        latest = ckpt.latest_step(args.ckpt_dir)
+        if latest is not None:
+            print(f"elastic restore from step {latest} "
+                  f"(mesh-shape independent)")
+            state = ckpt.restore(args.ckpt_dir, latest,
+                                 {"params": params, "opt": opt_state},
+                                 shardings={"params": p_sh, "opt": o_sh})
+            params, opt_state = state["params"], state["opt"]
+            start = latest
+
+        if args.data:
+            ds = PackedBinaryDataset(args.data, seq, global_batch)
+        else:
+            ds = SyntheticLM(cfg.vocab_size, seq, global_batch,
+                             embed_dim=cfg.d_model if cfg.embed_inputs
+                             else None, encdec=cfg.family == "encdec",
+                             learnable=args.reduced)
+
+        step_fn = jax.jit(
+            make_train_step(cfg, lr=args.lr, microbatches=args.microbatch),
+            donate_argnums=(0, 1))
+        saver = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
+        monitor = StragglerDetector()
+
+        for step in range(start, start + args.steps):
+            t0 = time.time()
+            batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            dt = time.time() - t0
+            monitor.record(0, dt)  # per-host on a real cluster
+            if step % 10 == 0 or step == start + args.steps - 1:
+                print(f"step {step:6d}  loss {float(metrics['loss']):8.4f}  "
+                      f"|g| {float(metrics['grad_norm']):8.3f}  "
+                      f"{global_batch * seq / dt:10.0f} tok/s", flush=True)
+            if step and step % args.ckpt_every == 0:
+                saver.save(step, {"params": params, "opt": opt_state})
+        saver.save(start + args.steps - 1,
+                   {"params": params, "opt": opt_state})
+        saver.wait()  # quiesce (completion rule) before exit
+        print("done")
+
+
+if __name__ == "__main__":
+    main()

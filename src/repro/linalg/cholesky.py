@@ -1,0 +1,155 @@
+"""Distributed blocked Cholesky as a PTG — the paper's §III-C benchmark app.
+
+Right-looking variant of Algorithm 1, in the PTG form of Fig 8:
+
+    potrf(k):        L_kk   = chol(A_kk)
+    trsm(i,k):       L_ik   = A_ik · L_kk^{-T}                (i > k)
+    syrk(k,i):       A_ii  -= L_ik · L_ikᵀ                    (i > k)
+    gemm(k,i,j):     A_ij  -= L_ik · L_jkᵀ                    (i > j > k)
+
+Blocks are 2D block-cyclic on a pr×pc grid. Factor blocks L_ik get fresh
+block ids (single assignment) because they cross shards: potrf/trsm results
+are exactly the payloads the paper ships via (large) active messages, while
+the A_ij update accumulations stay owner-local (read-modify-write).
+
+Priorities follow the paper's reference [5] in spirit: tasks on the
+critical path (small k first, potrf > trsm > updates) are preferred.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.discovery import PTG
+from repro.core.schedule import BlockPTGSpec
+
+
+def cholesky_spec(nb: int, pr: int, pc: int, b: int,
+                  dtype=jnp.float32) -> BlockPTGSpec:
+    def owner(blk) -> int:
+        _, i, j = blk
+        return (i % pr) * pc + (j % pc)
+
+    def block_of(t):
+        tt = t[0]
+        if tt == "potrf":                        # ("potrf", k)
+            return ("L", t[1], t[1])
+        if tt == "trsm":                         # ("trsm", i, k)
+            return ("L", t[1], t[2])
+        if tt == "syrk":                         # ("syrk", k, i)
+            return ("A", t[2], t[2])
+        _, k, i, j = t                           # ("gemm", k, i, j)
+        return ("A", i, j)
+
+    def mapping(t):
+        return owner(block_of(t))
+
+    def operands(t):
+        tt = t[0]
+        if tt == "potrf":
+            k = t[1]
+            return [("A", k, k)]
+        if tt == "trsm":
+            _, i, k = t
+            return [("A", i, k), ("L", k, k)]
+        if tt == "syrk":
+            _, k, i = t
+            return [("A", i, i), ("L", i, k)]
+        _, k, i, j = t
+        return [("A", i, j), ("L", i, k), ("L", j, k)]
+
+    def in_deps(t):
+        tt = t[0]
+        if tt == "potrf":
+            k = t[1]
+            return [] if k == 0 else [("syrk", k - 1, k)]
+        if tt == "trsm":
+            _, i, k = t
+            deps = [("potrf", k)]
+            if k > 0:
+                deps.append(("gemm", k - 1, i, k))
+            return deps
+        if tt == "syrk":
+            _, k, i = t
+            deps = [("trsm", i, k)]
+            if k > 0:
+                deps.append(("syrk", k - 1, i))
+            return deps
+        _, k, i, j = t
+        deps = [("trsm", i, k), ("trsm", j, k)]
+        if k > 0:
+            deps.append(("gemm", k - 1, i, j))
+        return deps
+
+    def out_deps(t):
+        tt = t[0]
+        out = []
+        if tt == "potrf":
+            k = t[1]
+            out = [("trsm", i, k) for i in range(k + 1, nb)]
+        elif tt == "trsm":
+            _, i, k = t
+            out.append(("syrk", k, i))
+            out.extend(("gemm", k, i, j) for j in range(k + 1, i))
+            out.extend(("gemm", k, i2, i) for i2 in range(i + 1, nb))
+        elif tt == "syrk":
+            _, k, i = t
+            out.append(("potrf", i) if i == k + 1 else ("syrk", k + 1, i))
+        else:
+            _, k, i, j = t
+            out.append(("trsm", i, j) if j == k + 1 else ("gemm", k + 1, i, j))
+        return out
+
+    def type_of(t):
+        return t[0]
+
+    return BlockPTGSpec(
+        ptg=PTG(in_deps, out_deps, mapping, type_of),
+        seeds=[("potrf", 0)], n_shards=pr * pc, block_shape=(b, b),
+        block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+
+
+def cholesky_bodies(matmul=None, trsm=None) -> Dict[str, object]:
+    """Per-block bodies; matmul/trsm pluggable (jnp fallback or Pallas)."""
+    mm = matmul if matmul is not None else lambda a, b: a @ b
+
+    def _trsm(a, l_kk):
+        # Solve X · L_kkᵀ = A_ik  =>  X = A_ik · L_kk^{-T}
+        return jax.scipy.linalg.solve_triangular(
+            l_kk, a.T, lower=True, trans="N").T
+
+    return {
+        "potrf": lambda a: jnp.linalg.cholesky(a),
+        "trsm": trsm if trsm is not None else _trsm,
+        "syrk": lambda a, l: a - mm(l, l.T),
+        "gemm": lambda a, li, lj: a - mm(li, lj.T),
+    }
+
+
+def make_spd_blocks(nb: int, b: int, seed: int = 0) -> Dict[Tuple, np.ndarray]:
+    """Random SPD matrix, returned as lower-triangle blocks {("A", i, j)}."""
+    rng = np.random.default_rng(seed)
+    n = nb * b
+    m = rng.standard_normal((n, n)).astype(np.float32)
+    a = (m @ m.T) / n + np.eye(n, dtype=np.float32) * 2.0
+    blocks: Dict[Tuple, np.ndarray] = {}
+    for i in range(nb):
+        for j in range(i + 1):
+            blocks[("A", i, j)] = a[i * b:(i + 1) * b, j * b:(j + 1) * b].copy()
+    return blocks, a
+
+
+def assemble_lower(blocks: Dict[Tuple, np.ndarray], nb: int, b: int):
+    """Assemble L from ("L", i, k) blocks (strict upper ignored)."""
+    out = np.zeros((nb * b, nb * b), np.float32)
+    for i in range(nb):
+        for k in range(i + 1):
+            blk = blocks.get(("L", i, k))
+            if blk is not None:
+                out[i * b:(i + 1) * b, k * b:(k + 1) * b] = blk
+    out[np.triu_indices(nb * b, 1)] = 0.0
+    return out

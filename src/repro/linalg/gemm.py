@@ -1,0 +1,247 @@
+"""Distributed block GEMM as a PTG — the paper's §III-B benchmark app.
+
+Two mappings, as in the paper:
+
+- **2D block-cyclic** (`gemm_2d_spec`): C_ij owned by shard
+  (i mod pr, j mod pc); contributions A_ik·B_kj are sequenced in k on the
+  owner of C_ij — the exact `gemm_Cikj` PTG of the paper (indegree
+  ``k == 0 ? 2 : 3``), with send tasks broadcasting A along grid rows and B
+  along grid columns via (compiled) active messages.
+- **3D DNS** (`gemm_3d_spec`): the k-range is sliced into q slabs; each slab
+  plane computes a partial product which a reduction chain sums into C —
+  less comm per plane, one extra reduction stage (paper Fig 7a-b/d).
+
+``staged=True`` threads a chain through the send tasks so the A_ik / B_kj
+broadcasts happen at wavefront k instead of all at wavefront 0: the
+compiled schedule then overlaps each step's exchange with the previous
+step's compute and needs O(nb/p) message buffers instead of O(nb²/p²) —
+a beyond-paper scheduling optimization measured in §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.discovery import PTG
+from repro.core.schedule import BlockPTGSpec
+
+
+# ------------------------------------------------------------- 2D mapping
+
+def gemm_2d_spec(nb: int, pr: int, pc: int, b: int, *, staged: bool = False,
+                 dtype=jnp.float32) -> BlockPTGSpec:
+    """nb×nb blocks of size b×b on a pr×pc shard grid."""
+
+    def owner(blk) -> int:
+        kind, r, c = blk
+        return (r % pr) * pc + (c % pc)
+
+    def mapping(k):
+        if k[0] == "gemm":                       # ("gemm", i, kk, j)
+            _, i, _, j = k
+            return owner(("C", i, j))
+        _, i, kk = k                             # ("sa"|"sb", row, col)
+        return owner(("A" if k[0] == "sa" else "B", i, kk))
+
+    def _step(t) -> int:
+        # the k-step a send task belongs to: sa(i, k) -> k; sb(k, j) -> k
+        return t[2] if t[0] == "sa" else t[1]
+
+    def in_deps(t):
+        if t[0] == "gemm":
+            _, i, kk, j = t
+            deps = [("sa", i, kk), ("sb", kk, j)]
+            if kk > 0:
+                deps.append(("gemm", i, kk - 1, j))
+            return deps
+        if staged and _step(t) > 0:              # send chain: step k waits k-1
+            return [("sa", t[1], t[2] - 1) if t[0] == "sa"
+                    else ("sb", t[1] - 1, t[2])]
+        return []
+
+    def out_deps(t):
+        if t[0] == "gemm":
+            _, i, kk, j = t
+            return [("gemm", i, kk + 1, j)] if kk + 1 < nb else []
+        if t[0] == "sa":
+            _, i, kk = t
+            out = [("gemm", i, kk, j) for j in range(nb)]
+            if staged and kk + 1 < nb:
+                out.append(("sa", i, kk + 1))
+        else:
+            _, kk, j = t
+            out = [("gemm", i, kk, j) for i in range(nb)]
+            if staged and kk + 1 < nb:
+                out.append(("sb", kk + 1, j))
+        return out
+
+    def block_of(t):
+        if t[0] == "gemm":
+            return ("C", t[1], t[3])
+        return ("A", t[1], t[2]) if t[0] == "sa" else ("B", t[1], t[2])
+
+    def operands(t):
+        if t[0] == "gemm":
+            _, i, kk, j = t
+            return [("C", i, j), ("A", i, kk), ("B", kk, j)]
+        return [block_of(t)]                     # identity "send" body
+
+    def type_of(t):
+        return t[0]
+
+    if staged:
+        seeds = [("sa", i, 0) for i in range(nb)] + \
+                [("sb", 0, j) for j in range(nb)]
+    else:
+        seeds = [("sa", i, kk) for i in range(nb) for kk in range(nb)] + \
+                [("sb", kk, j) for kk in range(nb) for j in range(nb)]
+
+    return BlockPTGSpec(
+        ptg=PTG(in_deps, out_deps, mapping, type_of),
+        seeds=seeds, n_shards=pr * pc, block_shape=(b, b),
+        block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+
+
+# ------------------------------------------------------------- 3D mapping
+
+def gemm_3d_spec(nb: int, q: int, b: int, *, dtype=jnp.float32) -> BlockPTGSpec:
+    """DNS mapping on a q×q×q grid: slab l owns k in [l·nb/q, (l+1)·nb/q)."""
+    assert nb % q == 0, "nb must divide into q slabs"
+    kb = nb // q  # blocks per slab
+
+    def shard(l, r, c) -> int:
+        return l * q * q + (r % q) * q + (c % q)
+
+    def slab(kk: int) -> int:
+        return kk // kb
+
+    def owner(blk) -> int:
+        kind = blk[0]
+        if kind == "A":
+            _, i, kk = blk
+            return shard(slab(kk), i, kk)
+        if kind == "B":
+            _, kk, j = blk
+            return shard(slab(kk), kk, j)
+        if kind in ("P", "Pf"):                  # partial C per slab
+            _, i, j, l = blk
+            return shard(l, i, j)
+        _, i, j = blk                            # final C on slab 0
+        return shard(0, i, j)
+
+    def mapping(t):
+        return owner(block_of(t))
+
+    def block_of(t):
+        tt = t[0]
+        if tt == "gemm":
+            _, i, kk, j = t
+            return ("P", i, j, slab(kk))
+        if tt == "sa":
+            return ("A", t[1], t[2])
+        if tt == "sb":
+            return ("B", t[1], t[2])
+        if tt == "fin":                          # ("fin", i, j, l)
+            return ("Pf", t[1], t[2], t[3])
+        return ("C", t[1], t[2])                 # ("red", i, j, l)
+
+    def operands(t):
+        tt = t[0]
+        if tt == "gemm":
+            _, i, kk, j = t
+            return [("P", i, j, slab(kk)), ("A", i, kk), ("B", kk, j)]
+        if tt in ("sa", "sb"):
+            return [block_of(t)]
+        if tt == "fin":
+            return [("P", t[1], t[2], t[3])]
+        _, i, j, l = t                           # red: C += Pf_l
+        return [("C", i, j), ("Pf", i, j, l)]
+
+    def in_deps(t):
+        tt = t[0]
+        if tt == "gemm":
+            _, i, kk, j = t
+            deps = [("sa", i, kk), ("sb", kk, j)]
+            if kk % kb > 0:
+                deps.append(("gemm", i, kk - 1, j))
+            return deps
+        if tt in ("sa", "sb"):
+            return []
+        if tt == "fin":
+            _, i, j, l = t
+            return [("gemm", i, (l + 1) * kb - 1, j)]
+        _, i, j, l = t                           # red
+        deps = [("fin", i, j, l)]
+        if l > 0:
+            deps.append(("red", i, j, l - 1))
+        return deps
+
+    def out_deps(t):
+        tt = t[0]
+        if tt == "gemm":
+            _, i, kk, j = t
+            if kk % kb + 1 < kb:
+                return [("gemm", i, kk + 1, j)]
+            return [("fin", i, j, slab(kk))]
+        if tt == "sa":
+            _, i, kk = t
+            return [("gemm", i, kk, j) for j in range(nb)]
+        if tt == "sb":
+            _, kk, j = t
+            return [("gemm", i, kk, j) for i in range(nb)]
+        if tt == "fin":
+            _, i, j, l = t
+            return [("red", i, j, l)]
+        _, i, j, l = t                           # red
+        return [("red", i, j, l + 1)] if l + 1 < q else []
+
+    def type_of(t):
+        return t[0]
+
+    seeds = [("sa", i, kk) for i in range(nb) for kk in range(nb)] + \
+            [("sb", kk, j) for kk in range(nb) for j in range(nb)]
+    return BlockPTGSpec(
+        ptg=PTG(in_deps, out_deps, mapping, type_of),
+        seeds=seeds, n_shards=q ** 3, block_shape=(b, b),
+        block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+
+
+# ------------------------------------------------------------ bodies/oracle
+
+def gemm_bodies(matmul=None) -> Dict[str, object]:
+    """Per-block compute bodies; ``matmul`` is pluggable (jnp or Pallas)."""
+    mm = matmul if matmul is not None else lambda a, b: a @ b
+
+    return {
+        "sa": lambda a: a,
+        "sb": lambda b_: b_,
+        "gemm": lambda c, a, b_: c + mm(a, b_),
+        "fin": lambda p: p,
+        "red": lambda c, pf: c + pf,
+    }
+
+
+def make_blocks(key, nb: int, b: int, *, with_partials: Tuple[int, ...] = (),
+                seed: int = 0) -> Dict[Tuple, np.ndarray]:
+    """Random A/B blocks, zero C blocks (and zero 3D partials if requested)."""
+    rng = np.random.default_rng(seed)
+    blocks: Dict[Tuple, np.ndarray] = {}
+    for i in range(nb):
+        for j in range(nb):
+            blocks[("A", i, j)] = rng.standard_normal((b, b)).astype(np.float32)
+            blocks[("B", i, j)] = rng.standard_normal((b, b)).astype(np.float32)
+            blocks[("C", i, j)] = np.zeros((b, b), np.float32)
+            for l in with_partials:
+                blocks[("P", i, j, l)] = np.zeros((b, b), np.float32)
+    return blocks
+
+
+def assemble(blocks: Dict[Tuple, np.ndarray], kind: str, nb: int, b: int):
+    out = np.zeros((nb * b, nb * b), np.float32)
+    for i in range(nb):
+        for j in range(nb):
+            out[i * b:(i + 1) * b, j * b:(j + 1) * b] = blocks[(kind, i, j)]
+    return out

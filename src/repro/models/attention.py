@@ -1,0 +1,103 @@
+"""Attention variants: GQA (with qk-norm/RoPE/windows) and MLA.
+
+Three execution paths:
+- train/prefill: `chunked_attention` — differentiable jnp online-softmax over
+  KV chunks (flash-style memory behavior, O(S·chunk) live scores), which XLA
+  fuses well; on TPU the Pallas `flash_attention` kernel takes over for the
+  non-differentiated serve path.
+- decode: single-token attention against a cache (Pallas `decode_attention`
+  on TPU, oracle elsewhere).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.ref import decode_ref
+from repro.kernels.flash_attention.ref import mha_ref
+
+NEG_INF = -1e30
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, chunk: int = 1024,
+                      window: int = 0):
+    """q [B,Hq,Lq,D], k/v [B,Hkv,Lk,D] -> [B,Hq,Lq,D]; differentiable,
+    never materializes more than [*, Lq, chunk] scores."""
+    from repro.launch.flags import attn_chunk
+
+    chunk = attn_chunk() or chunk
+    b, hq, lq, dh = q.shape
+    _, hkv, lk, dk = k.shape          # dk may differ from dv (MLA: 192/128)
+    dv = v.shape[-1]
+    group = hq // hkv
+    scale = dh ** -0.5
+    if lk <= chunk:
+        return _attn_block(q, k, v, 0, causal, window, scale, group)
+
+    n_chunks = lk // chunk
+    assert lk % chunk == 0, (lk, chunk)
+    ks = k.reshape(b, hkv, n_chunks, chunk, dk).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, hkv, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, kc, vc = inp
+        kx = jnp.repeat(kc, group, axis=1).astype(jnp.float32)
+        vx = jnp.repeat(vc, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) * scale
+        qpos = jnp.arange(lq)[:, None] + (lk - lq)
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = jnp.ones((lq, chunk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + p.sum(-1, keepdims=True)
+        acc = alpha * acc + jnp.einsum("bhqk,bhkd->bhqd", p, vx)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hq, lq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, lq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hq, lq, dv), jnp.float32)
+    from repro.launch.flags import scan_unroll_arg
+
+    # nested remat: without it every chunk's [.., lq, chunk] score matrix is
+    # saved as a scan residual for backward — O(S²) live memory, the exact
+    # thing flash attention exists to avoid. With it only carries survive.
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, a0), (jnp.arange(n_chunks), ks, vs),
+        unroll=scan_unroll_arg())
+    return (acc / l).astype(q.dtype)
+
+
+def _attn_block(q, k, v, k_offset, causal, window, scale, group):
+    b, hq, lq, dh = q.shape
+    lk = k.shape[2]
+    kx = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) * scale
+    qpos = jnp.arange(lq)[:, None] + (k_offset + lk - lq)
+    kpos = k_offset + jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx).astype(q.dtype)
+
+
+def decode_attention_host(q, k, v, kv_len=None):
+    """Single-token decode (oracle path; Pallas kernel on TPU via ops)."""
+    return decode_ref(q, k, v, kv_len)
+
+
+__all__ = ["chunked_attention", "decode_attention_host", "mha_ref"]

@@ -1,0 +1,54 @@
+"""Shared model layers: RMSNorm, RoPE, FFNs, initializers (pure JAX)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dtype)
+
+
+def rope_freqs(positions: jnp.ndarray, dim: int, theta: float) -> tuple:
+    """positions [*] -> (cos, sin) each [*, dim/2] (f32)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [..., S, D]; cos/sin broadcastable to [..., S, D/2]."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    while cos.ndim < x1.ndim:
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_in: jnp.ndarray,
+           w_out: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_in)
+    return h @ w_out
+
+
+def gelu_mlp(x: jnp.ndarray, w_in: jnp.ndarray, w_out: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.gelu(x @ w_in, approximate=True) @ w_out
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """LeCun-normal in the input dimension(s)."""
+    fan_in = 1
+    for ax in range(len(shape) - 1) if in_axis is None else [in_axis]:
+        fan_in *= shape[ax]
+    return (jax.random.normal(key, shape) * (fan_in ** -0.5)).astype(dtype)
+
+
+def stacked_dense_init(key, n: int, shape, in_axis: int = 0,
+                       dtype=jnp.float32):
+    """[n, *shape] — one init per layer."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: dense_init(k, shape, in_axis, dtype))(keys)

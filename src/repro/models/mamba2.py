@@ -1,0 +1,127 @@
+"""Mamba-2 block (SSD) — train path via the differentiable reference scan,
+serve path via the Pallas chunked kernel on TPU; O(1)-state decode step.
+
+Projection layout follows the Mamba-2 paper: one in-projection produces
+[z | x | B | C | dt]; a depthwise causal conv runs over [x | B | C]; the SSD
+scan mixes over time; gated RMSNorm and out-projection close the block.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+from .layers import rms_norm
+
+
+def mamba2_params_shapes(ssm: SSMConfig, d_model: int) -> dict:
+    di = ssm.d_inner(d_model)
+    nh = ssm.n_heads(d_model)
+    g, n = ssm.n_groups, ssm.d_state
+    conv_dim = di + 2 * g * n
+    return {
+        "w_in": (d_model, 2 * di + 2 * g * n + nh),  # z,x,B,C,dt
+        "conv_w": (ssm.d_conv, conv_dim),            # depthwise causal conv
+        "conv_b": (conv_dim,),
+        "a_log": (nh,),
+        "d_skip": (nh,),
+        "dt_bias": (nh,),
+        "norm_w": (di,),
+        "w_out": (di, d_model),
+    }
+
+
+def _split(proj: jnp.ndarray, ssm: SSMConfig, d_model: int):
+    di = ssm.d_inner(d_model)
+    g, n = ssm.n_groups, ssm.d_state
+    nh = ssm.n_heads(d_model)
+    z, xbc, dt = jnp.split(proj, [di, di + di + 2 * g * n], axis=-1)
+    return z, xbc, dt, di, g, n, nh
+
+
+def mamba2_forward(x: jnp.ndarray, p: dict, ssm: SSMConfig,
+                   d_model: int) -> jnp.ndarray:
+    """x: [B, S, D] -> [B, S, D] (full-sequence; differentiable)."""
+    bsz, s, _ = x.shape
+    proj = x @ p["w_in"]
+    z, xbc, dt, di, g, n, nh = _split(proj, ssm, d_model)
+
+    # depthwise causal conv over the sequence
+    pad = jnp.pad(xbc, ((0, 0), (ssm.d_conv - 1, 0), (0, 0)))
+    xbc = sum(pad[:, i:i + s] * p["conv_w"][i][None, None]
+              for i in range(ssm.d_conv))
+    xbc = jax.nn.silu(xbc + p["conv_b"][None, None])
+
+    xs, b_mat, c_mat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xs = xs.reshape(bsz, s, nh, ssm.head_dim)
+    b_mat = b_mat.reshape(bsz, s, g, n)
+    c_mat = c_mat.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    from repro.launch.flags import ssd_chunk
+
+    y = ssd(xs, dt.astype(xs.dtype), a, b_mat, c_mat,
+            p["d_skip"].astype(jnp.float32),
+            q_chunk=ssd_chunk() or 128)
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["w_out"]
+
+
+class Mamba2State(NamedTuple):
+    conv: jnp.ndarray   # [B, d_conv-1, conv_dim]
+    ssm: jnp.ndarray    # [B, nh, N, P] (f32)
+
+
+def mamba2_init_state(ssm: SSMConfig, d_model: int, batch: int,
+                      dtype=jnp.bfloat16) -> Mamba2State:
+    di = ssm.d_inner(d_model)
+    g, n = ssm.n_groups, ssm.d_state
+    nh = ssm.n_heads(d_model)
+    conv_dim = di + 2 * g * n
+    return Mamba2State(
+        conv=jnp.zeros((batch, ssm.d_conv - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, nh, n, ssm.head_dim), jnp.float32))
+
+
+def mamba2_step(x: jnp.ndarray, state: Mamba2State, p: dict, ssm: SSMConfig,
+                d_model: int) -> Tuple[jnp.ndarray, Mamba2State]:
+    """Single-token decode: x [B, D] -> (y [B, D], new state). O(1) per token
+    — this is what makes long_500k tractable for SSM/hybrid archs."""
+    bsz = x.shape[0]
+    proj = x @ p["w_in"]
+    z, xbc, dt, di, g, n, nh = _split(proj, ssm, d_model)
+
+    window = jnp.concatenate([state.conv, xbc[:, None]], axis=1)
+    conv_out = (window * p["conv_w"][None]).sum(axis=1) + p["conv_b"][None]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+
+    xs, b_mat, c_mat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xs = xs.reshape(bsz, nh, ssm.head_dim).astype(jnp.float32)
+    b_mat = b_mat.reshape(bsz, g, n).astype(jnp.float32)
+    c_mat = c_mat.reshape(bsz, g, n).astype(jnp.float32)
+    rep = nh // g
+    b_h = jnp.repeat(b_mat, rep, axis=1)   # [B, nh, N]
+    c_h = jnp.repeat(c_mat, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None].astype(jnp.float32))  # [B, nh]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                    # [nh]
+
+    decay = jnp.exp(dt * a[None])                                   # [B, nh]
+    xdt = xs * dt[..., None]
+    h_new = (decay[..., None, None] * state.ssm
+             + b_h[..., :, None] * xdt[..., None, :])               # [B,nh,N,P]
+    y = jnp.einsum("bhn,bhnp->bhp", c_h, h_new)
+    y = y + xs * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"])
+    return y @ p["w_out"], Mamba2State(conv=new_conv, ssm=h_new)

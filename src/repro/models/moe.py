@@ -1,0 +1,149 @@
+"""Mixture-of-Experts layer: token-choice top-k with capacity, SPMD-friendly.
+
+Dispatch is the TPU-standard sort-free scatter/gather form, decomposed into
+**data-parallel rows**: tokens reshape to [R, T_local] where R = pod x data
+(`ctx.data_rows()`), and every dispatch structure (one-hot cumsum positions,
+capacity, the [R, E, C, D] expert buffers) is per-row. This keeps buffers
+O(local tokens) — dispatching over global tokens would materialize a
+capacity buffer proportional to the *global* batch (150 TB at deepseek's
+train_4k scale; measured in EXPERIMENTS §Perf A2).
+
+The expert dimension shards over the "model" mesh axis when E divides it
+(deepseek: 256/16 = 16 experts per group — expert parallelism; the row
+boundary then makes the a2a pattern explicit); otherwise the expert hidden
+dim shards (grok: 8 experts, d_ff 32768/16 = 2048).
+
+Routers: "softmax" (classic top-k) or "sigmoid" (deepseek-v3 aux-loss-free:
+sigmoid affinities + learned per-expert bias; the bias is a non-gradient
+buffer updated by the training loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.dist.ctx import annotate, batch_axes, data_rows, get_mesh
+
+
+def moe_params_shapes(cfg_moe: MoEConfig, d_model: int, ffn: str) -> dict:
+    e = cfg_moe.n_experts
+    f = cfg_moe.d_ff
+    shapes = {
+        "router": (d_model, e),
+        "router_bias": (e,),
+        "w_in": (e, d_model, f),
+        "w_out": (e, f, d_model),
+    }
+    if ffn == "swiglu":
+        shapes["w_gate"] = (e, d_model, f)
+    if cfg_moe.n_shared_experts:
+        fs = f * cfg_moe.n_shared_experts
+        shapes["shared_w_in"] = (d_model, fs)
+        shapes["shared_w_out"] = (fs, d_model)
+        if ffn == "swiglu":
+            shapes["shared_w_gate"] = (d_model, fs)
+    return shapes
+
+
+def _expert_spec(e: int) -> P:
+    mesh = get_mesh()
+    if mesh is not None and e % mesh.shape.get("model", 1) == 0:
+        return P(batch_axes(), "model", None, None)
+    return P(batch_axes(), None, None, None)
+
+
+def moe_ffn(x: jnp.ndarray, p: dict, cfg_moe: MoEConfig, ffn: str,
+            compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """x: [B, S, D] -> [B, S, D]."""
+    from repro.launch.flags import moe_capacity_factor
+
+    cf = moe_capacity_factor()
+    if cf is not None:
+        cfg_moe = dataclasses.replace(cfg_moe, capacity_factor=cf)
+
+    b, s, d = x.shape
+    e, k = cfg_moe.n_experts, cfg_moe.experts_per_token
+    rows = data_rows()
+    if b % rows != 0:
+        rows = 1
+    t = (b * s) // rows                                       # per-row tokens
+    xt = x.reshape(rows, t, d)
+    xt = annotate(xt, P(batch_axes(), None, None))
+
+    logits = jnp.einsum("rtd,de->rte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    if cfg_moe.router == "sigmoid":           # deepseek-v3 aux-free
+        affinity = jax.nn.sigmoid(logits)
+        select = affinity + p["router_bias"].astype(jnp.float32)
+        weights_src = affinity
+    else:
+        select = jax.nn.softmax(logits, axis=-1)
+        weights_src = select
+    _, topk_idx = jax.lax.top_k(select, k)                    # [R, T, k]
+    topk_w = jnp.take_along_axis(weights_src, topk_idx, axis=-1)
+    topk_w = topk_w / (topk_w.sum(-1, keepdims=True) + 1e-9)  # renormalize
+
+    cap = int(t * k / e * cfg_moe.capacity_factor) + 1
+    onehot = jax.nn.one_hot(topk_idx, e, dtype=jnp.int32)     # [R, T, k, E]
+    flat = onehot.reshape(rows, t * k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1                 # [R, T*k, E]
+    pos_in_e = (pos * flat).sum(-1).reshape(rows, t, k)       # [R, T, k]
+    expert = topk_idx
+    keep = pos_in_e < cap
+
+    # scatter tokens into [R, E, C, D] (vmapped over rows — row-local).
+    # Loop over the k slots: a fused [T, k, D] gather materializes
+    # tokens x k activation copies (14 GiB/device at deepseek scale —
+    # EXPERIMENTS §Perf A3); per-slot passes peak at [T, D].
+    def scatter_row(xr, er, pr, kr):
+        xin = jnp.zeros((e, cap, d), compute_dtype)
+        xr_c = xr.astype(compute_dtype)
+        for j in range(k):
+            xin = xin.at[
+                jnp.where(kr[:, j], er[:, j], e - 1),
+                jnp.where(kr[:, j], pr[:, j], cap - 1)
+            ].add(jnp.where(kr[:, j, None], xr_c, 0))
+        return xin
+
+    xin = jax.vmap(scatter_row)(xt, expert, pos_in_e, keep)   # [R, E, C, D]
+    xin = annotate(xin, _expert_spec(e))
+
+    # batched expert FFN (expert dim sharded by the mesh rules)
+    if "w_gate" in p:
+        h = jax.nn.silu(jnp.einsum("recd,edf->recf", xin, p["w_gate"])) \
+            * jnp.einsum("recd,edf->recf", xin, p["w_in"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("recd,edf->recf", xin, p["w_in"]),
+                        approximate=True)
+    yout = jnp.einsum("recf,efd->recd", h, p["w_out"])        # [R, E, C, D]
+    yout = annotate(yout, _expert_spec(e))
+
+    # combine: gather each token's k expert outputs, weight, sum (row-local;
+    # same per-slot looping — no [T, k, D] f32 intermediate)
+    def combine_row(yr, er, pr, kr, wr):
+        acc = jnp.zeros((t, d), jnp.float32)
+        for j in range(k):
+            g = yr[jnp.where(kr[:, j], er[:, j], 0),
+                   jnp.where(kr[:, j], pr[:, j], 0)]          # [T, D]
+            g = jnp.where(kr[:, j, None], g, 0).astype(jnp.float32)
+            acc = acc + g * wr[:, j, None]
+        return acc
+
+    y = jax.vmap(combine_row)(yout, expert, pos_in_e, keep,
+                              topk_w).astype(x.dtype)         # [R, T, D]
+
+    if cfg_moe.n_shared_experts:
+        xs = xt.astype(compute_dtype)
+        if "shared_w_gate" in p:
+            hs = jax.nn.silu(xs @ p["shared_w_gate"]) * (xs @ p["shared_w_in"])
+        else:
+            hs = jax.nn.gelu(xs @ p["shared_w_in"], approximate=True)
+        y = y + (hs @ p["shared_w_out"]).astype(x.dtype)
+
+    return y.reshape(b, s, d)

@@ -1,0 +1,667 @@
+"""The model zoo: one init/forward/prefill/decode covering all families.
+
+Families: dense (llama-style GQA), vlm (dense + embed inputs), moe
+(GQA or MLA attention + top-k experts), ssm (Mamba-2), hybrid (Mamba-2
+backbone + one shared attention block, zamba-style), encdec (bidirectional
+encoder + causal decoder with cross-attention).
+
+Layers execute under ``lax.scan`` over stacked parameters (small HLO at 61
+layers — essential for the 80-cell dry-run) with optional remat. Params are
+plain pytrees; sharding rules attach by tree path in repro.dist.sharding.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.ctx import act_spec, annotate
+from repro.models.attention import chunked_attention, decode_attention_host
+from repro.models.layers import (apply_rope, dense_init, gelu_mlp, rms_norm,
+                                 rope_freqs, stacked_dense_init, swiglu)
+from repro.models.mamba2 import (Mamba2State, mamba2_forward, mamba2_init_state,
+                                 mamba2_params_shapes, mamba2_step)
+from repro.models.moe import moe_ffn, moe_params_shapes
+
+
+# =============================================================== parameters
+
+def _attn_shapes(cfg: ModelConfig) -> Dict[str, tuple]:
+    d, hd = cfg.d_model, cfg.head_dim
+    if cfg.attention == "mla":
+        m = cfg.mla
+        qk = m.qk_nope_dim + m.qk_rope_dim
+        s = {
+            "wq_a": (d, m.q_lora_rank),
+            "q_ln": (m.q_lora_rank,),
+            "wq_b": (m.q_lora_rank, cfg.n_heads * qk),
+            "wkv_a": (d, m.kv_lora_rank + m.qk_rope_dim),
+            "kv_ln": (m.kv_lora_rank,),
+            "wkv_b": (m.kv_lora_rank,
+                      cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)),
+            "wo": (cfg.n_heads * m.v_head_dim, d),
+        }
+        return s
+    s = {
+        "wq": (d, cfg.n_heads * hd),
+        "wk": (d, cfg.n_kv_heads * hd),
+        "wv": (d, cfg.n_kv_heads * hd),
+        "wo": (cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = (hd,)
+        s["k_norm"] = (hd,)
+    return s
+
+
+def _ffn_shapes(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, tuple]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.ffn == "swiglu":
+        return {"w_gate": (d, f), "w_in": (d, f), "w_out": (f, d)}
+    return {"w_in": (d, f), "w_out": (f, d)}
+
+
+def _block_shapes(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    if kind == "ssm":
+        return {"ln": (d,), "mamba": mamba2_params_shapes(cfg.ssm, d)}
+    s: Dict[str, Any] = {"ln1": (d,), "ln2": (d,),
+                         "attn": _attn_shapes(cfg)}
+    if kind == "moe":
+        s["moe"] = moe_params_shapes(cfg.moe, d, cfg.ffn)
+    elif kind == "cross":  # encdec decoder block
+        s["ln_cross"] = (d,)
+        s["cross"] = _attn_shapes(cfg)
+        s["ffn"] = _ffn_shapes(cfg)
+    else:
+        s["ffn"] = _ffn_shapes(cfg)
+    return s
+
+
+def _init_tree(key, shapes, n_stack: int, dtype) -> Any:
+    flat, treedef = jax.tree.flatten(shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for k, shp in zip(keys, flat):
+        if len(shp) == 1:  # norm weights / biases -> ones (biases re-zeroed)
+            leaves.append(jnp.ones((n_stack, *shp) if n_stack else shp, dtype))
+        else:
+            leaves.append(stacked_dense_init(k, n_stack, shp, 0, dtype)
+                          if n_stack else dense_init(k, shp, 0, dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def _zero_biases(tree, names=("router_bias", "conv_b", "dt_bias")):
+    def fix(path, leaf):
+        last = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if last in names:
+            return jnp.zeros_like(leaf)
+        if last == "a_log":
+            return jnp.zeros_like(leaf)  # A = -1 -> stable decay
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, tree)
+
+
+def layer_kinds(cfg: ModelConfig) -> Dict[str, int]:
+    """Named layer segments -> stack depth (scan runs per segment)."""
+    if cfg.family in ("dense", "vlm"):
+        return {"dense": cfg.n_layers}
+    if cfg.family == "moe":
+        fd = cfg.moe.first_dense_layers
+        out = {}
+        if fd:
+            out["dense"] = fd
+        out["moe"] = cfg.n_layers - fd
+        return out
+    if cfg.family == "ssm":
+        return {"ssm": cfg.n_layers}
+    if cfg.family == "hybrid":
+        return {"ssm": cfg.n_layers}  # + one shared attn block (unstacked)
+    if cfg.family == "encdec":
+        return {"enc": cfg.encoder_layers, "cross": cfg.n_layers}
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model), 1, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), 0, dtype)
+    ki = iter(jax.random.split(keys[2], 8))
+    for seg, depth in layer_kinds(cfg).items():
+        kind = {"dense": "dense", "moe": "moe", "ssm": "ssm", "enc": "dense",
+                "cross": "cross"}[seg]
+        params[seg] = _init_tree(next(ki), _block_shapes(cfg, kind), depth,
+                                 dtype)
+    if cfg.family == "hybrid":
+        params["shared"] = _init_tree(next(ki), _block_shapes(cfg, "dense"),
+                                      0, dtype)
+    if cfg.family == "encdec":
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+    return _zero_biases(params)
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """Shapes-only params (dry-run: no allocation)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ============================================================== attention
+
+def _gqa_full(cfg: ModelConfig, p, x, *, causal=True, window=0,
+              kv_x=None, positions=None):
+    """Full-sequence GQA (train/prefill); returns (out, (k, v) cache)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    kv_src = x if kv_x is None else kv_x
+    sk = kv_src.shape[1]
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (kv_src @ p["wk"]).reshape(b, sk, cfg.n_kv_heads, hd)
+    v = (kv_src @ p["wv"]).reshape(b, sk, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if kv_x is None:  # self-attention: rope
+        pos = positions if positions is not None else jnp.arange(s)
+        cos, sin = rope_freqs(pos, hd, cfg.rope_theta)
+        q = apply_rope(q.transpose(0, 2, 1, 3), cos, sin)
+        k = apply_rope(k.transpose(0, 2, 1, 3), cos, sin)
+    else:
+        q = q.transpose(0, 2, 1, 3)
+        k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    o = chunked_attention(q, k, v, causal=causal, window=window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    return o @ p["wo"], (k, v)
+
+
+def _gqa_decode(cfg: ModelConfig, p, x, cache_kv, pos, *, window=0):
+    """x [B, D], cache_kv (k, v) [B, Hkv, S, hd]; writes at `pos`."""
+    b, d = x.shape
+    hd = cfg.head_dim
+    k_cache, v_cache = cache_kv
+    s_max = k_cache.shape[2]
+    q = (x @ p["wq"]).reshape(b, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_freqs(pos[None], hd, cfg.rope_theta)  # [1, hd/2]
+    q = apply_rope(q[:, :, None], cos, sin)[:, :, 0]
+    k = apply_rope(k[:, :, None], cos, sin)[:, :, 0]
+    slot = pos % s_max if window else pos  # ring buffer when windowed
+    k_cache = jax.lax.dynamic_update_index_in_dim(k_cache, k, slot, 2)
+    v_cache = jax.lax.dynamic_update_index_in_dim(v_cache, v, slot, 2)
+    kv_len = jnp.minimum(pos + 1, s_max)
+    o = decode_attention_host(q, k_cache, v_cache,
+                              jnp.full((b,), kv_len, jnp.int32))
+    o = o.reshape(b, cfg.n_heads * hd)
+    return o @ p["wo"], (k_cache, v_cache)
+
+
+def _mla_full(cfg: ModelConfig, p, x, positions=None):
+    """Full-sequence MLA (train/prefill); cache = (ckv, k_rope)."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    q_lat = rms_norm(x @ p["wq_a"], p["q_ln"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    kv_a = x @ p["wkv_a"]
+    ckv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_ln"], cfg.norm_eps)          # [B, S, r]
+    kvb = (ckv @ p["wkv_b"]).reshape(b, s, h, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_dim], axis=-1)
+
+    pos = positions if positions is not None else jnp.arange(s)
+    cos, sin = rope_freqs(pos, m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), cos, sin)
+    k_rope_r = apply_rope(k_rope[:, None], cos, sin)       # [B, 1, S, rope]
+    q_full = jnp.concatenate([q_nope.transpose(0, 2, 1, 3), q_rope], -1)
+    k_full = jnp.concatenate(
+        [k_nope.transpose(0, 2, 1, 3),
+         jnp.broadcast_to(k_rope_r, (b, h, s, m.qk_rope_dim))], -1)
+    o = chunked_attention(q_full, k_full, v.transpose(0, 2, 1, 3),
+                          causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
+    return o @ p["wo"], (ckv, k_rope_r[:, 0])
+
+
+def _mla_decode(cfg: ModelConfig, p, x, cache, pos):
+    """Absorbed-matmul MLA decode: attention runs in the latent space, so
+    per-token cost is O(S·(r + rope)) instead of O(S·H·dh)."""
+    m = cfg.mla
+    b, d = x.shape
+    h = cfg.n_heads
+    ckv_cache, krope_cache = cache                          # [B,S,r],[B,S,rope]
+    s_max = ckv_cache.shape[1]
+    q_lat = rms_norm(x @ p["wq_a"], p["q_ln"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"]).reshape(b, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    kv_a = x @ p["wkv_a"]
+    ckv_t, krope_t = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    ckv_t = rms_norm(ckv_t, p["kv_ln"], cfg.norm_eps)
+    cos, sin = rope_freqs(pos[None], m.qk_rope_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope[:, :, None], cos, sin)[:, :, 0]
+    krope_t = apply_rope(krope_t[:, None, None], cos, sin)[:, 0, 0]
+    ckv_cache = jax.lax.dynamic_update_index_in_dim(ckv_cache, ckv_t, pos, 1)
+    krope_cache = jax.lax.dynamic_update_index_in_dim(
+        krope_cache, krope_t, pos, 1)
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim)
+    w_k = wkv_b[..., : m.qk_nope_dim]                       # [r, H, nope]
+    w_v = wkv_b[..., m.qk_nope_dim:]                        # [r, H, vdim]
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                       w_k.astype(jnp.float32))             # [B, H, r]
+    scores = (jnp.einsum("bhr,bsr->bhs", q_abs,
+                         ckv_cache.astype(jnp.float32))
+              + jnp.einsum("bhp,bsp->bhs", q_rope.astype(jnp.float32),
+                           krope_cache.astype(jnp.float32)))
+    scores *= (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    mask = jnp.arange(s_max)[None, None, :] <= pos
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", ctx, w_v.astype(jnp.float32))
+    o = o.reshape(b, h * m.v_head_dim).astype(x.dtype)
+    return o @ p["wo"], (ckv_cache, krope_cache)
+
+
+# ================================================================= blocks
+
+def _cast_params(cfg: ModelConfig, p):
+    """Cast float params to the compute dtype at the point of use (norm
+    weights are re-upcast inside rms_norm; biases stay f32-safe there too)."""
+    ct = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(
+        lambda a: a.astype(ct) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        p)
+
+
+def _ffn_apply(cfg: ModelConfig, p, x):
+    if cfg.ffn == "swiglu":
+        return swiglu(x, p["w_gate"], p["w_in"], p["w_out"])
+    return gelu_mlp(x, p["w_in"], p["w_out"])
+
+
+def _block_full(cfg: ModelConfig, kind: str, p, x, *, enc_out=None,
+                positions=None, window=0):
+    """Full-sequence block; returns (x, cache_for_layer)."""
+    p = _cast_params(cfg, p)
+    if kind == "ssm":
+        h = rms_norm(x, p["ln"], cfg.norm_eps)
+        return x + mamba2_forward(h, p["mamba"], cfg.ssm, cfg.d_model), None
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.attention == "mla" and kind in ("dense", "moe"):
+        att, cache = _mla_full(cfg, p["attn"], h, positions)
+    else:
+        causal = kind != "enc"
+        att, cache = _gqa_full(cfg, p["attn"], h, causal=causal,
+                               window=window, positions=positions)
+    x = x + att
+    if kind == "cross":
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        catt, ccache = _gqa_full(cfg, p["cross"], hc, causal=False,
+                                 kv_x=enc_out)
+        x = x + catt
+        cache = (cache, ccache)
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        y = moe_ffn(h2, p["moe"], cfg.moe, cfg.ffn,
+                    jnp.dtype(cfg.compute_dtype))
+    else:
+        y = _ffn_apply(cfg, p["ffn"], h2)
+    return x + y, cache
+
+
+# ============================================================ full forward
+
+def forward(cfg: ModelConfig, params, tokens=None, embeds=None,
+            enc_tokens=None, enc_embeds=None, *, collect_cache=False):
+    """Training/prefill forward -> (logits [B,S,V], caches or None)."""
+    if embeds is None:
+        x = params["embed"][tokens]
+    else:
+        x = embeds
+    x = annotate(x.astype(jnp.dtype(cfg.compute_dtype)), act_spec())
+    caches: Dict[str, Any] = {}
+
+    enc_out = None
+    if cfg.family == "encdec":
+        e = params["embed"][enc_tokens] if enc_embeds is None else enc_embeds
+        e = e.astype(x.dtype)
+        e = _scan_segment(cfg, "dense", params["enc"], e, causal_kind="enc")[0]
+        enc_out = rms_norm(e, params["enc_norm"], cfg.norm_eps)
+
+    if cfg.family == "hybrid":
+        x, caches = _hybrid_forward(cfg, params, x, collect_cache)
+    else:
+        for seg, depth in layer_kinds(cfg).items():
+            if seg == "enc":
+                continue
+            kind = {"dense": "dense", "moe": "moe", "ssm": "ssm",
+                    "cross": "cross"}[seg]
+            x, cache = _scan_segment(cfg, kind, params[seg], x,
+                                     enc_out=enc_out,
+                                     collect_cache=collect_cache)
+            if collect_cache:
+                caches[seg] = cache
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    logits = annotate(logits, P(("pod", "data"), None, "model"))
+    return logits, (caches if collect_cache else None)
+
+
+def _scan_segment(cfg, kind, seg_params, x, *, enc_out=None,
+                  collect_cache=False, causal_kind=None):
+    kind_eff = causal_kind or kind
+
+    def body(carry, layer_p):
+        # sequence-parallel layout between layers: remat saves the carry, so
+        # constraining it here divides residual-stack memory by the TP width
+        carry = annotate(carry, act_spec())
+        y, cache = _block_full(cfg, kind_eff, layer_p, carry,
+                               enc_out=enc_out)
+        y = annotate(y, act_spec())
+        return y, (cache if collect_cache else None)
+
+    from repro.launch.flags import remat_policy, scan_unroll_arg
+
+    policy = remat_policy()
+    if cfg.remat and policy != "none":
+        if policy == "dots":
+            # save matmul outputs (no recompute of the big GEMMs in bwd) at
+            # the cost of more live activation memory — §Perf lever
+            body = jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, seg_params, unroll=scan_unroll_arg())
+    return x, caches
+
+
+def _hybrid_forward(cfg, params, x, collect_cache):
+    """Mamba backbone with the shared attention block every k layers."""
+    segs = _hybrid_segments(cfg)
+    caches = {"ssm": [], "shared_kv": []}
+    offset = 0
+    for si, depth in enumerate(segs):
+        seg_p = jax.tree.map(lambda a: a[offset:offset + depth],
+                             params["ssm"])
+        x, c = _scan_segment(cfg, "ssm", seg_p, x,
+                             collect_cache=collect_cache)
+        offset += depth
+        if si < len(segs) - 1:  # shared attention between segments
+            x, kv = _block_full(cfg, "dense", params["shared"], x,
+                                window=cfg.sliding_window)
+            if collect_cache:
+                caches["shared_kv"].append(kv)
+    return x, caches
+
+
+def _hybrid_segments(cfg) -> Tuple[int, ...]:
+    every = cfg.shared_attn_every
+    n = cfg.n_layers
+    segs = []
+    done = 0
+    while done < n:
+        d = min(every, n - done)
+        segs.append(d)
+        done += d
+    return tuple(segs)
+
+
+def lm_loss(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    logits, _ = forward(cfg, params,
+                        tokens=batch.get("tokens"),
+                        embeds=batch.get("embeds"),
+                        enc_tokens=batch.get("enc_tokens"),
+                        enc_embeds=batch.get("enc_embeds"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ================================================================ serving
+
+class DecodeCache(NamedTuple):
+    pos: jnp.ndarray            # scalar int32
+    layers: Any                 # per-family cache pytree
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, enc_out=None) -> DecodeCache:
+    hd, hkv = cfg.head_dim, max(cfg.n_kv_heads, 1)
+    window = cfg.sliding_window or 0
+
+    def kv(n, s):
+        return (jnp.zeros((n, batch, hkv, s, hd), dtype),
+                jnp.zeros((n, batch, hkv, s, hd), dtype))
+
+    if cfg.family in ("dense", "vlm"):
+        layers = {"dense": kv(cfg.n_layers, max_seq)}
+    elif cfg.family == "moe":
+        fd = cfg.moe.first_dense_layers
+        layers = {}
+
+        def mla_cache(n):
+            m = cfg.mla
+            return (jnp.zeros((n, batch, max_seq, m.kv_lora_rank), dtype),
+                    jnp.zeros((n, batch, max_seq, m.qk_rope_dim), dtype))
+
+        if fd:
+            layers["dense"] = mla_cache(fd) if cfg.attention == "mla" \
+                else kv(fd, max_seq)
+        layers["moe"] = mla_cache(cfg.n_layers - fd) \
+            if cfg.attention == "mla" else kv(cfg.n_layers - fd, max_seq)
+    elif cfg.family == "ssm":
+        layers = {"ssm": _stacked_ssm_state(cfg, cfg.n_layers, batch, dtype)}
+    elif cfg.family == "hybrid":
+        n_sites = len(_hybrid_segments(cfg)) - 1
+        s_att = min(max_seq, window) if window else max_seq
+        layers = {
+            "ssm": _stacked_ssm_state(cfg, cfg.n_layers, batch, dtype),
+            "shared_kv": kv(max(n_sites, 1), s_att),
+        }
+    elif cfg.family == "encdec":
+        layers = {"cross_self": kv(cfg.n_layers, max_seq), "enc_out": enc_out}
+    else:
+        raise ValueError(cfg.family)
+    return DecodeCache(pos=jnp.zeros((), jnp.int32), layers=layers)
+
+
+def _stacked_ssm_state(cfg, n, batch, dtype):
+    st = mamba2_init_state(cfg.ssm, cfg.d_model, batch, dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n, *a.shape)), st)
+
+
+def decode_step(cfg: ModelConfig, params, token_or_embed,
+                cache: DecodeCache):
+    """One decode step: token [B] (or embed [B, D]) -> (logits [B,V], cache).
+
+    Layer caches are scanned alongside the stacked layer params, so the HLO
+    stays O(1) in depth.
+    """
+    if token_or_embed.ndim == 1:
+        x = params["embed"][token_or_embed]
+    else:
+        x = token_or_embed
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    pos = cache.pos
+    new_layers = dict(cache.layers)
+
+    if cfg.family in ("dense", "vlm"):
+        x, new_layers["dense"] = _decode_scan_gqa(
+            cfg, params["dense"], x, cache.layers["dense"], pos)
+    elif cfg.family == "moe":
+        fd = cfg.moe.first_dense_layers
+        if fd:
+            x, new_layers["dense"] = _decode_scan_dense_seg(
+                cfg, params["dense"], x, cache.layers["dense"], pos)
+        x, new_layers["moe"] = _decode_scan_moe(
+            cfg, params["moe"], x, cache.layers["moe"], pos)
+    elif cfg.family == "ssm":
+        x, new_layers["ssm"] = _decode_scan_ssm(
+            cfg, params["ssm"], x, cache.layers["ssm"], pos)
+    elif cfg.family == "hybrid":
+        x, new_layers = _decode_hybrid(cfg, params, x, cache.layers, pos)
+    elif cfg.family == "encdec":
+        x, new_layers = _decode_encdec(cfg, params, x, cache.layers, pos)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    logits = annotate(logits, P(("pod", "data"), "model"))
+    return logits, DecodeCache(pos=pos + 1, layers=new_layers)
+
+
+def _unroll():
+    from repro.launch.flags import scan_unroll_arg
+    return scan_unroll_arg()
+
+
+def _decode_block_gqa(cfg, p, x, kv, pos, *, window=0, enc_out_kv=None):
+    p = _cast_params(cfg, p)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    att, kv = _gqa_decode(cfg, p["attn"], h, kv, pos, window=window)
+    x = x + att
+    if enc_out_kv is not None:
+        hc = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        q = (hc @ p["cross"]["wq"]).reshape(
+            x.shape[0], cfg.n_heads, cfg.head_dim)
+        o = decode_attention_host(q, enc_out_kv[0], enc_out_kv[1])
+        x = x + o.reshape(x.shape[0], -1) @ p["cross"]["wo"]
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y = moe_ffn(h2[:, None], p["moe"], cfg.moe, cfg.ffn,
+                    jnp.dtype(cfg.compute_dtype))[:, 0]
+    else:
+        y = _ffn_apply(cfg, p["ffn"], h2)
+    return x + y, kv
+
+
+def _decode_scan_gqa(cfg, seg_params, x, kv_cache, pos, window=0):
+    def body(carry, inp):
+        layer_p, kv = inp
+        y, kv = _decode_block_gqa(cfg, layer_p, carry, kv, pos,
+                                  window=window)
+        return y, kv
+
+    x, kv_out = jax.lax.scan(body, x, (seg_params, kv_cache),
+                             unroll=_unroll())
+    return x, kv_out
+
+
+def _decode_scan_dense_seg(cfg, seg_params, x, cache, pos):
+    """Dense-FFN segment; attention variant follows cfg.attention (MLA for
+    deepseek's leading dense layers)."""
+    if cfg.attention != "mla":
+        return _decode_scan_gqa(cfg, seg_params, x, cache, pos)
+
+    def body(carry, inp):
+        layer_p, c = inp
+        layer_p = _cast_params(cfg, layer_p)
+        h = rms_norm(carry, layer_p["ln1"], cfg.norm_eps)
+        att, c = _mla_decode(cfg, layer_p["attn"], h, c, pos)
+        y = carry + att
+        h2 = rms_norm(y, layer_p["ln2"], cfg.norm_eps)
+        y = y + _ffn_apply(cfg, layer_p["ffn"], h2)
+        return y, c
+
+    return jax.lax.scan(body, x, (seg_params, cache), unroll=_unroll())
+
+
+def _decode_scan_moe(cfg, seg_params, x, cache, pos):
+    if cfg.attention != "mla":
+        return _decode_scan_gqa(cfg, seg_params, x, cache, pos)
+
+    def body(carry, inp):
+        layer_p, c = inp
+        layer_p = _cast_params(cfg, layer_p)
+        h = rms_norm(carry, layer_p["ln1"], cfg.norm_eps)
+        att, c = _mla_decode(cfg, layer_p["attn"], h, c, pos)
+        y = carry + att
+        h2 = rms_norm(y, layer_p["ln2"], cfg.norm_eps)
+        y = y + moe_ffn(h2[:, None], layer_p["moe"], cfg.moe, cfg.ffn,
+                        jnp.dtype(cfg.compute_dtype))[:, 0]
+        return y, c
+
+    return jax.lax.scan(body, x, (seg_params, cache), unroll=_unroll())
+
+
+def _decode_scan_ssm(cfg, seg_params, x, states, pos):
+    def body(carry, inp):
+        layer_p, st = inp
+        layer_p = _cast_params(cfg, layer_p)
+        h = rms_norm(carry, layer_p["ln"], cfg.norm_eps)
+        y, st = mamba2_step(h, Mamba2State(*st), layer_p["mamba"],
+                            cfg.ssm, cfg.d_model)
+        return carry + y, tuple(st)
+
+    x, states = jax.lax.scan(body, x, (seg_params, tuple(states)),
+                             unroll=_unroll())
+    return x, states
+
+
+def _decode_hybrid(cfg, params, x, layers, pos):
+    segs = _hybrid_segments(cfg)
+    states = layers["ssm"]
+    kv = layers["shared_kv"]
+    new_states, new_kv = [], []
+    offset = 0
+    for si, depth in enumerate(segs):
+        seg_p = jax.tree.map(lambda a: a[offset:offset + depth],
+                             params["ssm"])
+        st = jax.tree.map(lambda a: a[offset:offset + depth], states)
+        x, st = _decode_scan_ssm(cfg, seg_p, x, st, pos)
+        new_states.append(st)
+        offset += depth
+        if si < len(segs) - 1:
+            kv_i = jax.tree.map(lambda a: a[si], kv)
+            x, kv_i = _decode_block_gqa(cfg, params["shared"], x, kv_i, pos,
+                                        window=cfg.sliding_window)
+            new_kv.append(kv_i)
+    states = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_states)
+    kv_out = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_kv) if new_kv \
+        else kv
+    return x, {"ssm": states, "shared_kv": kv_out}
+
+
+def _decode_encdec(cfg, params, x, layers, pos):
+    enc_out = layers["enc_out"]  # precomputed [L, B, Hkv, S_enc, hd] pairs
+
+    def body(carry, inp):
+        layer_p, kv, cross_kv = inp
+        y, kv = _decode_block_gqa(cfg, layer_p, carry, kv, pos,
+                                  enc_out_kv=cross_kv)
+        return y, kv
+
+    x, kv_out = jax.lax.scan(
+        body, x, (params["cross"], layers["cross_self"], enc_out),
+        unroll=_unroll())
+    return x, {"cross_self": kv_out, "enc_out": enc_out}
+
+
+def prefill(cfg: ModelConfig, params, tokens=None, embeds=None,
+            enc_tokens=None, enc_embeds=None):
+    """Forward over the prompt; returns last-position logits (cache wiring
+    for incremental decode is exercised via decode_step)."""
+    logits, _ = forward(cfg, params, tokens=tokens, embeds=embeds,
+                        enc_tokens=enc_tokens, enc_embeds=enc_embeds)
+    return logits[:, -1]

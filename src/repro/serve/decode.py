@@ -1,0 +1,28 @@
+"""Serve steps: prefill (prompt forward) and decode (one token vs cache)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return tfm.prefill(cfg, params,
+                           tokens=batch.get("tokens"),
+                           embeds=batch.get("embeds"),
+                           enc_embeds=batch.get("enc_embeds"))
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step; greedy next-token included so the step is a complete
+    serving unit (logits never leave the device)."""
+    def serve_step(params, token, cache):
+        logits, cache = tfm.decode_step(cfg, params, token, cache)
+        next_token = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        return next_token.astype(jnp.int32), logits, cache
+    return serve_step

@@ -1,0 +1,98 @@
+"""Elastic training control: heartbeats, straggler detection, re-mesh.
+
+At 1000+ nodes, failures are routine. The control loop here is
+host-level (it orchestrates compiled steps; it is not inside XLA):
+
+  heartbeat  — every host reports (step, wall_time) each step; a host
+               silent for `dead_after` seconds is declared failed.
+  straggler  — persistent per-step outliers (> `straggler_factor` × the
+               rolling median for `patience` consecutive steps) are flagged
+               for replacement/drain — the cluster-granularity version of
+               the paper's work stealing (within a compiled step the
+               schedule is static; between steps, placement is ours).
+  re-mesh    — on failure: drop to the survivor set, rebuild the mesh,
+               restore the latest checkpoint re-sharded to the new topology
+               (repro.train.checkpoint restores to any mesh), and continue.
+               PTG mapping functions are pure functions of the *current*
+               shard count, so schedules regenerate in O(local tasks).
+
+The decision logic is pure and unit-tested; the transport (who collects
+heartbeats) is the same rank-0 pattern as the paper's completion protocol.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+
+@dataclass
+class HeartbeatMonitor:
+    n_hosts: int
+    dead_after: float = 60.0
+    last_seen: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, host: int, now: Optional[float] = None) -> None:
+        self.last_seen[host] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h in range(self.n_hosts)
+                if now - self.last_seen.get(h, -1e30) > self.dead_after]
+
+
+@dataclass
+class StragglerDetector:
+    straggler_factor: float = 1.5
+    patience: int = 3
+    window: int = 32
+    _times: Dict[int, deque] = field(default_factory=lambda: defaultdict(
+        lambda: deque(maxlen=32)))
+    _strikes: Dict[int, int] = field(default_factory=lambda: defaultdict(int))
+
+    def record(self, host: int, step_time: float) -> None:
+        self._times[host].append(step_time)
+
+    def _median_of_medians(self) -> float:
+        meds = sorted(sorted(t)[len(t) // 2] for t in self._times.values()
+                      if t)
+        return meds[len(meds) // 2] if meds else 0.0
+
+    def stragglers(self) -> List[int]:
+        med = self._median_of_medians()
+        if med <= 0:
+            return []
+        out = []
+        for host, t in self._times.items():
+            if t and t[-1] > self.straggler_factor * med:
+                self._strikes[host] += 1
+            else:
+                self._strikes[host] = 0
+            if self._strikes[host] >= self.patience:
+                out.append(host)
+        return out
+
+
+@dataclass
+class ElasticPlan:
+    survivors: List[int]
+    mesh_shape: tuple
+    restore_step: Optional[int]
+
+
+def plan_remesh(n_hosts: int, failed: Sequence[int], chips_per_host: int,
+                model_axis: int, latest_ckpt: Optional[int]) -> ElasticPlan:
+    """Largest (data × model) mesh that fits the survivor set, keeping the
+    model axis fixed (TP width is a property of the arch config) and
+    shrinking data parallelism — batch is re-divided by the data pipeline
+    (deterministic in (seed, step), so no data is skipped or repeated)."""
+    survivors = [h for h in range(n_hosts) if h not in set(failed)]
+    chips = len(survivors) * chips_per_host
+    if chips < model_axis:
+        raise RuntimeError(
+            f"survivor set too small: {chips} chips < model axis {model_axis}")
+    data = chips // model_axis
+    return ElasticPlan(survivors=survivors, mesh_shape=(data, model_axis),
+                       restore_step=latest_ckpt)

@@ -1,0 +1,163 @@
+"""Optimizers in pure JAX: AdamW (fp32 states) and Adafactor (factored
+second moments — the giant-MoE memory policy, see DESIGN.md §5).
+
+Optimizer state trees mirror the param tree, so parameter shardings apply
+verbatim (ZeRO: sharded states come for free from FSDP rules).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _layer_scanned(fn, p, *rest):
+    """Run a per-leaf update under lax.scan over the stacked layer axis when
+    the leaf is layer-stacked (ndim >= 3, all operands share the leading
+    dim). Bounds optimizer f32 temporaries to ONE layer's worth instead of
+    the whole stack (EXPERIMENTS §Perf A5: the 61-layer Adafactor update
+    otherwise materializes multi-GiB f32 temps per leaf)."""
+    import os
+
+    if os.environ.get("REPRO_OPT_SCAN", "1") != "1":
+        return fn(p, *rest)
+    lead = p.shape[0] if p.ndim >= 3 else None
+    if not lead or any(r.ndim < 1 or r.shape[0] != lead for r in rest):
+        return fn(p, *rest)
+    from repro.launch.flags import scan_unroll_arg
+
+    def body(_, xs):
+        return None, fn(*xs)
+
+    _, out = jax.lax.scan(body, None, (p, *rest), unroll=scan_unroll_arg())
+    return out
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr=3e-4, b1=0.9,
+                 b2=0.95, eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd_leaf(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    def upd(p, g, m, v):
+        return _layer_scanned(upd_leaf, p, g, m, v)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any     # row second-moment factors (or full v for vectors)
+    vc: Any     # col factors (zeros-like placeholder for vectors)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) \
+            else jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr, params),
+                          vc=jax.tree.map(vc, params))
+
+
+def adafactor_update(params, grads, state: AdafactorState, *, lr=1e-3,
+                     decay=0.8, eps=1e-30, clip=1.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** -decay
+
+    def upd_leaf(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+            vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            u = g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :]
+                     + eps)
+        else:
+            vr = beta * vr + (1 - beta) * g2
+            u = g / (jnp.sqrt(vr) + eps)
+        norm = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, norm / clip)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc
+
+    def upd(p, g, vr, vc):
+        # _factored() depends only on rank, which the layer scan preserves
+        # (a [L, a, b] leaf scans to [a, b] slices — still factored)
+        return _layer_scanned(upd_leaf, p, g, vr, vc)
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2))
+
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(name)
+
+
+def opt_state_specs(params_specs, opt_name: str, abstract_params):
+    """Sharding specs for the optimizer state, derived from param specs."""
+    from jax.sharding import PartitionSpec as P
+
+    if opt_name == "adamw":
+        return AdamWState(step=P(), m=params_specs, v=params_specs)
+
+    def vr_spec(spec, p):
+        entries = list(spec) + [None] * (p.ndim - len(list(spec)))
+        return P(*entries[:-1]) if p.ndim >= 2 else P(*entries)
+
+    def vc_spec(spec, p):
+        if p.ndim < 2:
+            return P(None)
+        entries = list(spec) + [None] * (p.ndim - len(list(spec)))
+        return P(*(entries[:-2] + entries[-1:]))
+
+    vr = jax.tree.map(vr_spec, params_specs, abstract_params,
+                      is_leaf=lambda x: isinstance(x, P))
+    vc = jax.tree.map(vc_spec, params_specs, abstract_params,
+                      is_leaf=lambda x: isinstance(x, P))
+    from jax.sharding import PartitionSpec
+    return AdafactorState(step=PartitionSpec(), vr=vr, vc=vc)

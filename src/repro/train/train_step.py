@@ -1,0 +1,66 @@
+"""Jittable train step: loss -> grads -> optimizer update (+ metrics).
+
+Gradient accumulation (REPRO_MICROBATCH=k or the `microbatches` arg) splits
+the global batch into k sequential microbatches inside one jitted step: all
+activation-side temporaries shrink ~k x for one f32 params-sized
+accumulator; compute is unchanged. The standard memory/latency knob at
+scale (EXPERIMENTS §Perf A6).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import lm_loss
+from repro.train.optimizer import make_optimizer
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
+                    microbatches: int | None = None):
+    _, update = make_optimizer(cfg.optimizer)
+    mb = microbatches or int(os.environ.get("REPRO_MICROBATCH", "1"))
+
+    def grads_of(params, batch):
+        if mb <= 1:
+            return jax.value_and_grad(
+                lambda p: lm_loss(cfg, p, batch))(params)
+        split = jax.tree.map(
+            lambda x: x.reshape(mb, x.shape[0] // mb, *x.shape[1:]), batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc(carry, mb_batch):
+            l, g = jax.value_and_grad(
+                lambda p: lm_loss(cfg, p, mb_batch))(params)
+            carry = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), carry, g)
+            return carry, l
+
+        from repro.launch.flags import scan_unroll_arg
+
+        grads, losses = jax.lax.scan(acc, zero, split,
+                                     unroll=scan_unroll_arg())
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        return losses.mean(), grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        params, opt_state = update(params, grads, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key):
+    from repro.models.transformer import init_params
+
+    init_opt, _ = make_optimizer(cfg.optimizer)
+    params = init_params(cfg, key)
+    return params, init_opt(params)

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward + one train-grad step + one decode step on CPU; asserts output
+shapes and absence of NaNs. The FULL configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import reduced, shapes_for
+from repro.configs.registry import all_archs, get_config
+from repro.models import transformer as tfm
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.embed_inputs:
+        batch["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model),
+                                            jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.random.normal(ks[1], (B, S, cfg.d_model),
+                                                jnp.float32)
+    batch["labels"] = jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch))
+    params = tfm.init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+    logits, _ = jax.jit(lambda p, b: tfm.forward(
+        cfg, p, tokens=b.get("tokens"), embeds=b.get("embeds"),
+        enc_embeds=b.get("enc_embeds")))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_train_grad_step(arch):
+    cfg = reduced(get_config(arch))
+    params = tfm.init_params(cfg, jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: tfm.lm_loss(cfg, p, batch)))(params)
+    assert np.isfinite(float(loss)), arch
+    gnorm = jax.tree.reduce(
+        lambda a, g: a + float(jnp.sum(jnp.square(g.astype(jnp.float32)))),
+        grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0.0, arch
+    # one SGD step must reduce... no guarantee in 1 step; check finiteness of
+    # updated params instead
+    new = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    l2, _ = jax.jit(jax.value_and_grad(
+        lambda p: tfm.lm_loss(cfg, p, batch)))(new)
+    assert np.isfinite(float(l2)), arch
+
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_decode_step(arch):
+    cfg = reduced(get_config(arch))
+    params = tfm.init_params(cfg, jax.random.key(0))
+    enc_out = None
+    if cfg.family == "encdec":
+        # precompute cross K/V from a tiny "encoder output" stub
+        hd, hkv = cfg.head_dim, cfg.n_kv_heads
+        enc_out = (jnp.zeros((cfg.n_layers, B, hkv, S, hd), jnp.bfloat16),
+                   jnp.zeros((cfg.n_layers, B, hkv, S, hd), jnp.bfloat16))
+    cache = tfm.init_cache(cfg, B, 64, enc_out=enc_out)
+
+    step = jax.jit(lambda p, t, c: tfm.decode_step(cfg, p, t, c))
+    tok = jnp.array([1, 2], jnp.int32)
+    if cfg.embed_inputs:
+        tok = jax.random.normal(jax.random.key(2), (B, cfg.d_model),
+                                jnp.float32)
+    logits, cache = step(params, tok, cache)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert int(cache.pos) == 1
+    logits2, cache = step(params, tok, cache)
+    assert int(cache.pos) == 2
+    assert np.isfinite(np.asarray(logits2, np.float32)).all(), arch
+
+
+def test_param_counts_match_published_scale():
+    """Full configs must land near the published parameter counts."""
+    expect = {
+        "yi-34b": 34e9, "yi-6b": 6e9, "qwen3-14b": 14e9,
+        "starcoder2-3b": 3e9, "deepseek-v3-671b": 671e9,
+        "grok-1-314b": 314e9, "mamba2-1.3b": 1.3e9, "zamba2-1.2b": 1.2e9,
+        "llava-next-34b": 34e9,
+    }
+    for arch, target in expect.items():
+        n = get_config(arch).n_params()
+        assert 0.6 * target < n < 1.6 * target, (arch, n, target)
+
+
+def test_moe_active_params_below_total():
+    cfg = get_config("deepseek-v3-671b")
+    assert cfg.n_active_params() < 0.1 * cfg.n_params()
+
+
+def test_shape_cells_skip_rules():
+    """long_500k runs only for subquadratic archs (DESIGN.md)."""
+    for arch in all_archs():
+        cfg = get_config(arch)
+        names = [c.name for c in shapes_for(cfg)]
+        if arch in ("mamba2-1.3b", "zamba2-1.2b"):
+            assert "long_500k" in names, arch
+        else:
+            assert "long_500k" not in names, arch
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(names)

@@ -1,0 +1,155 @@
+"""Property tests for the distributed completion protocol (§II-B3).
+
+Theorem 1 (correctness): SHUTDOWN is sent iff completion was reached — i.e.
+no message is lost: every queued AM is processed before the world shuts down.
+Theorem 2 (finiteness): the protocol terminates.
+
+We stress both with adversarial message delivery: random per-message delays
+(which reorder delivery arbitrarily across (src, dst) pairs) and random task
+topologies, including long chains of AM ping-pong that repeatedly make ranks
+*look* idle while messages are still in flight — the exact failure mode of
+the naive "everyone says IDLE once" strategy the paper warns about.
+"""
+
+import random
+import threading
+
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import run_ranks
+
+
+def _delay_fn(seed: float, max_delay: float):
+    rng = random.Random(seed)
+    lock = threading.Lock()
+
+    def fn(src, dst, kind):
+        with lock:
+            return rng.uniform(0.0, max_delay)
+
+    return fn
+
+
+@settings(deadline=None, max_examples=15,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n_ranks=st.integers(2, 4),
+    n_msgs=st.integers(1, 25),
+    seed=st.integers(0, 2**31),
+    max_delay=st.sampled_from([0.0, 0.002, 0.02]),
+)
+def test_no_early_termination_scatter(n_ranks, n_msgs, seed, max_delay):
+    """Rank 0 scatters n_msgs AMs; delayed delivery must not cause early
+    SHUTDOWN: every rank must have processed all its messages at join."""
+
+    def main(ctx):
+        received = []
+        am = ctx.comm.make_active_msg(lambda i: received.append(i))
+        if ctx.rank == 0:
+            for i in range(n_msgs):
+                am.send(1 + (i % (ctx.n_ranks - 1)), i)
+        ctx.tp.join()
+        return received
+
+    res = run_ranks(n_ranks, main, delay_fn=_delay_fn(seed, max_delay),
+                    timeout=60.0)
+    got = sorted(x for r in res for x in r)
+    assert got == list(range(n_msgs)), "messages lost => early termination"
+
+
+@settings(deadline=None, max_examples=10,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n_ranks=st.integers(2, 4),
+    hops=st.integers(1, 30),
+    seed=st.integers(0, 2**31),
+)
+def test_ping_pong_chain(n_ranks, hops, seed):
+    """An AM chain hopping rank-to-rank: between hops *all* ranks are idle
+    and a message is in flight — the adversarial case for completion. The
+    chain must complete all hops before shutdown (Theorem 1), and the run
+    must terminate (Theorem 2, enforced by the timeout)."""
+
+    def main(ctx):
+        count = [0]
+        am_holder = {}
+
+        def on_hop(i):
+            count[0] += 1
+            if i + 1 < hops:
+                am_holder["am"].send((ctx.rank + 1) % ctx.n_ranks, i + 1)
+
+        am_holder["am"] = ctx.comm.make_active_msg(on_hop)
+        if ctx.rank == 0:
+            am_holder["am"].send(1 % ctx.n_ranks, 0)
+        ctx.tp.join()
+        return count[0]
+
+    res = run_ranks(n_ranks, main, delay_fn=_delay_fn(seed, 0.005), timeout=60.0)
+    assert sum(res) == hops
+
+
+@settings(deadline=None, max_examples=8,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n_ranks=st.integers(2, 3),
+    width=st.integers(1, 6),
+    depth=st.integers(1, 6),
+    seed=st.integers(0, 2**31),
+)
+def test_task_cascade_across_ranks(n_ranks, width, depth, seed):
+    """AMs fulfill remote taskflow promises which send more AMs — tasks and
+    messages interleave; completion must wait for the whole cascade."""
+
+    def main(ctx):
+        done = []
+        tf = ctx.taskflow("cascade")
+        am_holder = {}
+
+        tf.set_indegree(lambda k: 1)
+        tf.set_mapping(lambda k: k[1] % ctx.tp.n_threads)
+
+        def body(k):
+            level, i = k
+            done.append(k)
+            if level + 1 < depth:
+                am_holder["am"].send((ctx.rank + 1) % ctx.n_ranks,
+                                     (level + 1, i))
+
+        tf.set_task(body)
+        am_holder["am"] = ctx.comm.make_active_msg(
+            lambda k: tf.fulfill_promise(tuple(k)))
+        if ctx.rank == 0:
+            for i in range(width):
+                tf.fulfill_promise((0, i))
+        ctx.tp.join()
+        return len(done)
+
+    res = run_ranks(n_ranks, main, delay_fn=_delay_fn(seed, 0.003), timeout=60.0)
+    assert sum(res) == width * depth
+
+
+def test_empty_program_terminates():
+    """No AMs at all: the protocol must still shut down (q=p=0)."""
+
+    def main(ctx):
+        ctx.tp.join()
+        return True
+
+    assert run_ranks(3, main, timeout=30.0) == [True, True, True]
+
+
+def test_counters_exclude_protocol_traffic():
+    """q_r / p_r must count only user AMs, never COUNT/REQUEST/... traffic."""
+
+    def main(ctx):
+        am = ctx.comm.make_active_msg(lambda: None)
+        if ctx.rank == 0:
+            am.send(1)
+        ctx.tp.join()
+        return (ctx.comm.queued_count, ctx.comm.processed_count)
+
+    res = run_ranks(2, main, timeout=30.0)
+    assert res[0] == (1, 0)
+    assert res[1] == (0, 1)

@@ -1,0 +1,302 @@
+"""Unit tests for the TaskTorrent host runtime: threadpool, taskflow, AMs."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    READWRITE,
+    STFGraph,
+    Task,
+    Taskflow,
+    Threadpool,
+    run_ranks,
+    view,
+)
+
+
+# --------------------------------------------------------------- threadpool
+
+def test_threadpool_runs_all_tasks():
+    tp = Threadpool(4)
+    done = []
+    lock = threading.Lock()
+    for i in range(200):
+        tp.insert(Task(run=lambda i=i: (lock.acquire(), done.append(i),
+                                        lock.release())), i % 4)
+    tp.join()
+    assert sorted(done) == list(range(200))
+
+
+def test_threadpool_deferred_start():
+    """Paper's micro-benchmark setup: insert everything, then start."""
+    tp = Threadpool(2, start=False)
+    done = []
+    lock = threading.Lock()
+    for i in range(50):
+        tp.insert(Task(run=lambda i=i: (lock.acquire(), done.append(i),
+                                        lock.release())), i % 2)
+    assert done == []  # nothing ran yet
+    tp.start()
+    tp.join()
+    assert len(done) == 50
+
+
+def test_threadpool_priority_order():
+    """Higher priority runs first within one thread (max-heap semantics)."""
+    tp = Threadpool(1, start=False)
+    order = []
+    for i, prio in enumerate([1.0, 5.0, 3.0]):
+        tp.insert(Task(run=lambda i=i: order.append(i), priority=prio), 0,
+                  bound=True)
+    tp.start()
+    tp.join()
+    assert order == [1, 2, 0]
+
+
+def test_work_stealing_balances_load():
+    """All tasks mapped to thread 0, stealable: other threads must steal."""
+    tp = Threadpool(4)
+    n = 64
+    counter = {"done": 0}
+    lock = threading.Lock()
+
+    def body():
+        time.sleep(0.002)
+        with lock:
+            counter["done"] += 1
+
+    for _ in range(n):
+        tp.insert(Task(run=body), 0, bound=False)
+    tp.join()
+    assert counter["done"] == n
+    assert tp.stats["steals"] > 0, "expected work stealing to kick in"
+
+
+def test_bound_tasks_never_stolen():
+    tp = Threadpool(4)
+    executed_on = []
+    lock = threading.Lock()
+
+    def body():
+        from repro.core.threadpool import current_thread_id
+        with lock:
+            executed_on.append(current_thread_id())
+        time.sleep(0.001)
+
+    for _ in range(32):
+        tp.insert(Task(run=body), 1, bound=True)
+    tp.join()
+    assert set(executed_on) == {1}
+
+
+# ----------------------------------------------------------------- taskflow
+
+def test_taskflow_chain():
+    """k -> k+1 chain: strict sequential dependency ordering."""
+    tp = Threadpool(4)
+    tf = Taskflow(tp, "chain")
+    order = []
+    n = 100
+
+    tf.set_indegree(lambda k: 1)
+    tf.set_mapping(lambda k: k % 4)
+
+    def body(k):
+        order.append(k)
+        if k + 1 < n:
+            tf.fulfill_promise(k + 1)
+
+    tf.set_task(body)
+    tf.fulfill_promise(0)
+    tp.join()
+    assert order == list(range(n))
+
+
+def test_taskflow_2d_wavefront():
+    """Paper Fig 6 dependency pattern: (i,j) -> ((i+k)%nrows, j+1)."""
+    nrows, ncols, ndeps = 8, 12, 3
+    tp = Threadpool(4)
+    tf = Taskflow(tp, "wave")
+    done = set()
+    lock = threading.Lock()
+
+    tf.set_indegree(lambda ij: 1 if ij[1] == 0 else ndeps)
+    tf.set_mapping(lambda ij: ij[0] % 4)
+
+    def body(ij):
+        i, j = ij
+        with lock:
+            # all in-deps must have completed
+            if j > 0:
+                for k in range(ndeps):
+                    src = ((i - k) % nrows, j - 1)
+                    assert src in done, f"{ij} ran before {src}"
+            done.add(ij)
+        if j + 1 < ncols:
+            for k in range(ndeps):
+                tf.fulfill_promise(((i + k) % nrows, j + 1))
+
+    tf.set_task(body)
+    for i in range(nrows):
+        tf.fulfill_promise((i, 0))
+    tp.join()
+    assert len(done) == nrows * ncols
+
+
+def test_taskflow_forgets_completed_tasks():
+    tp = Threadpool(2)
+    tf = Taskflow(tp, "mem")
+    tf.set_indegree(lambda k: 1)
+    tf.set_mapping(lambda k: 0)
+    tf.set_task(lambda k: None)
+    for k in range(64):
+        tf.fulfill_promise(k)
+    tp.join()
+    assert tf.pending() == 0  # O(live tasks) state, all forgotten
+
+
+def test_taskflow_indegree_must_be_positive():
+    tp = Threadpool(1)
+    tf = Taskflow(tp, "bad")
+    tf.set_indegree(lambda k: 0)
+    tf.set_mapping(lambda k: 0)
+    tf.set_task(lambda k: None)
+    tf.fulfill_promise(7)
+    with pytest.raises(ValueError, match="indegree"):
+        tp.join()
+
+
+# ------------------------------------------------------------ distributed AM
+
+def test_active_message_roundtrip():
+    """Rank 0 sends AMs to rank 1; payload arrives intact, fn runs remotely."""
+
+    def main(ctx):
+        received = []
+        am = ctx.comm.make_active_msg(lambda k, x: received.append((k, x)))
+        if ctx.rank == 0:
+            for k in range(10):
+                am.send(1, k, k * k)
+        ctx.tp.join()
+        return received
+
+    res = run_ranks(2, main, n_threads=2)
+    assert res[0] == []
+    assert sorted(res[1]) == [(k, k * k) for k in range(10)]
+
+
+def test_payload_reusable_after_send():
+    """send() serializes immediately: mutating the arg after send is safe."""
+
+    def main(ctx):
+        received = []
+        am = ctx.comm.make_active_msg(lambda arr: received.append(np.array(arr)))
+        if ctx.rank == 0:
+            buf = np.arange(8)
+            am.send(1, view(buf))
+            buf[:] = -1  # mutate after send; receiver must see 0..7
+        ctx.tp.join()
+        return received
+
+    res = run_ranks(2, main)
+    np.testing.assert_array_equal(res[1][0], np.arange(8))
+
+
+def test_large_am_three_callbacks():
+    """Large AM: alloc on receiver, process on receiver, complete on sender."""
+
+    def main(ctx):
+        state = {"buf": None, "processed": False, "sender_done": False}
+
+        def alloc(n):
+            state["buf"] = np.zeros(n, dtype=np.float64)
+            return state["buf"]
+
+        def process(n):
+            state["processed"] = True
+
+        def complete():
+            state["sender_done"] = True
+
+        lam = ctx.comm.make_large_active_msg(process, alloc, complete)
+        if ctx.rank == 0:
+            data = np.linspace(0.0, 1.0, 32)
+            lam.send(1, 32, view(data))
+        ctx.tp.join()
+        return state
+
+    res = run_ranks(2, main)
+    assert res[0]["sender_done"] is True
+    assert res[1]["processed"] is True
+    np.testing.assert_allclose(res[1]["buf"], np.linspace(0.0, 1.0, 32))
+
+
+def test_am_triggers_remote_taskflow():
+    """The paper's canonical pattern: AM stores data + fulfills a promise."""
+
+    def main(ctx):
+        data = {}
+        tf = ctx.taskflow("remote")
+        out = []
+        tf.set_indegree(lambda k: 1)
+        tf.set_mapping(lambda k: k % 2)
+        tf.set_task(lambda k: out.append((k, data[k])))
+
+        am = ctx.comm.make_active_msg(
+            lambda d, payload: (data.__setitem__(d, payload),
+                                tf.fulfill_promise(d)))
+        if ctx.rank == 0:
+            for d in range(6):
+                am.send(1, d, d * 10)
+        ctx.tp.join()
+        return sorted(out)
+
+    res = run_ranks(2, main)
+    assert res[1] == [(d, d * 10) for d in range(6)]
+
+
+def test_am_registration_order_mismatch_detected():
+    def main(ctx):
+        if ctx.rank == 0:
+            ctx.comm.make_active_msg(lambda: None)
+        else:
+            def other(): pass
+            ctx.comm.make_active_msg(other)
+        # Let both ranks register before failing the assertion window.
+        time.sleep(0.05)
+        ctx.comm.make_active_msg(lambda: None)  # triggers cross-check
+        ctx.tp.join()
+
+    with pytest.raises(RuntimeError):
+        run_ranks(2, main)
+
+
+# ---------------------------------------------------------------- STF model
+
+def test_stf_infers_raw_war_waw():
+    tp = Threadpool(2)
+    g = STFGraph(tp)
+    log = []
+    lock = threading.Lock()
+
+    def mk(name):
+        def fn():
+            with lock:
+                log.append(name)
+        return fn
+
+    g.submit(mk("w1"), [("x", "W")])
+    g.submit(mk("r1"), [("x", "R")])
+    g.submit(mk("r2"), [("x", "R")])
+    g.submit(mk("w2"), [("x", "W")])          # WAR on r1/r2, WAW on w1
+    g.submit(mk("rw"), [("x", READWRITE)])    # RAW on w2
+    g.execute()
+    tp.join()
+    assert log.index("w1") < log.index("r1")
+    assert log.index("w1") < log.index("r2")
+    assert log.index("r1") < log.index("w2")
+    assert log.index("r2") < log.index("w2")
+    assert log.index("w2") < log.index("rw")

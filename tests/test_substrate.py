@@ -1,0 +1,247 @@
+"""Substrate tests: checkpointing, data pipeline, elastic control,
+optimizers, sharding rules (single device)."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import reduced
+from repro.configs.registry import all_archs, get_config
+from repro.dist.sharding import param_specs
+from repro.models import transformer as tfm
+from repro.train import checkpoint as ckpt
+from repro.train.data import PackedBinaryDataset, SyntheticLM
+from repro.train.elastic import HeartbeatMonitor, StragglerDetector, plan_remesh
+from repro.train.optimizer import (adafactor_init, adafactor_update,
+                                   adamw_init, adamw_update)
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "nested": {"b": jnp.ones((5,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 3, tree)
+        out = ckpt.restore(d, 3, tree)
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        assert np.asarray(out["nested"]["b"]).dtype == np.dtype("bfloat16") \
+            or out["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_atomic_publish_and_gc():
+    tree = {"w": jnp.zeros((4,))}
+    with tempfile.TemporaryDirectory() as d:
+        c = ckpt.AsyncCheckpointer(d, keep=2)
+        for step in (1, 2, 3, 4):
+            c.save(step, tree)
+        c.wait()
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                       if x.startswith("step_"))
+        assert steps == [3, 4]  # gc kept last 2, no .tmp residue
+        assert not any(x.endswith(".tmp") for x in os.listdir(d))
+        assert ckpt.latest_step(d) == 4
+
+
+def test_async_checkpoint_quiesces():
+    tree = {"w": jnp.ones((256, 256))}
+    with tempfile.TemporaryDirectory() as d:
+        c = ckpt.AsyncCheckpointer(d)
+        c.save(1, tree)
+        c.wait()  # the completion-protocol role: no in-flight writes after
+        out = ckpt.restore(d, 1, tree)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+
+
+# ------------------------------------------------------------------- data
+
+def test_synthetic_data_deterministic_in_step():
+    ds = SyntheticLM(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    b1, b2 = ds.batch_at(5), ds.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = ds.batch_at(6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token
+    assert b1["tokens"].shape == b1["labels"].shape
+
+
+def test_packed_binary_dataset_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "tokens.bin")
+        toks = np.arange(1000, dtype=np.uint32) % 50
+        PackedBinaryDataset.write(path, toks)
+        ds = PackedBinaryDataset(path, seq_len=16, global_batch=4)
+        b = ds.batch_at(0)
+        assert b["tokens"].shape == (4, 16)
+        np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# ---------------------------------------------------------------- elastic
+
+def test_heartbeat_detects_dead_host():
+    m = HeartbeatMonitor(n_hosts=3, dead_after=10.0)
+    m.beat(0, now=100.0)
+    m.beat(1, now=100.0)
+    m.beat(2, now=95.0)
+    assert m.dead_hosts(now=106.0) == [2]
+    assert m.dead_hosts(now=100.0) == []
+
+
+def test_straggler_needs_persistence():
+    s = StragglerDetector(straggler_factor=1.5, patience=3)
+    for step in range(10):
+        for h in range(4):
+            s.record(h, 1.0)
+    # one slow step is not enough
+    s.record(0, 10.0)
+    assert s.stragglers() == []
+    s.record(0, 10.0)
+    assert s.stragglers() == []
+    s.record(0, 10.0)
+    assert 0 in s.stragglers()
+
+
+def test_plan_remesh_shrinks_data_axis():
+    plan = plan_remesh(n_hosts=64, failed=[3, 17], chips_per_host=4,
+                       model_axis=16, latest_ckpt=1200)
+    assert plan.mesh_shape == ((62 * 4) // 16, 16)
+    assert plan.restore_step == 1200
+    with pytest.raises(RuntimeError):
+        plan_remesh(n_hosts=4, failed=[0, 1, 2], chips_per_host=4,
+                    model_axis=16, latest_ckpt=None)
+
+
+# -------------------------------------------------------------- optimizer
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**31))
+def test_adamw_reduces_quadratic(seed):
+    key = jax.random.key(seed)
+    target = jax.random.normal(key, (8,))
+    params = {"w": jnp.zeros((8,))}
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = loss(params)
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(params, g, state, lr=5e-2,
+                                     weight_decay=0.0)
+    assert loss(params) < l0 * 0.5
+
+
+def test_adafactor_factored_state_is_small():
+    params = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((512,))}
+    state = adafactor_init(params)
+    assert state.vr["w"].shape == (256,)
+    assert state.vc["w"].shape == (512,)
+    assert state.vr["b"].shape == (512,)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum((p["b"] - 1.0) ** 2)
+
+    g = jax.grad(loss)(params)
+    new, state = adafactor_update(params, g, state, lr=1e-2)
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(new))
+
+
+# --------------------------------------------------------------- sharding
+
+@pytest.mark.parametrize("arch", all_archs())
+def test_param_specs_cover_tree(arch):
+    """Every param leaf gets a spec of matching rank; large matrices are
+    actually sharded (not silently replicated)."""
+    cfg = get_config(arch)
+    specs = param_specs(cfg)
+    abstract = tfm.abstract_params(cfg)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    flat_p = jax.tree.leaves(abstract)
+    assert len(flat_s) == len(flat_p)
+    big_sharded = 0
+    for s, p in zip(flat_s, flat_p):
+        assert len(s) <= p.ndim, (s, p.shape)
+        if p.size > 1e6:
+            assert any(e is not None for e in s), (s, p.shape)
+            big_sharded += 1
+    assert big_sharded > 0
+
+
+# ------------------------------------------------- spec sanitization rules
+
+def test_sanitize_spec_drops_nondivisible_axes():
+    from repro.dist.sharding import sanitize_spec
+
+    sizes = {"data": 16, "model": 16, "pod": 2}
+    # vocab 50280 cannot split 16 ways -> drop; 2048 can
+    s = sanitize_spec(P("model", "data"), (50280, 2048), sizes)
+    assert s == P(None, "data")
+    # tuple entries drop rightmost-first: batch 32 divides pod*data=32
+    s = sanitize_spec(P(("pod", "data"), None), (32, 128), sizes)
+    assert s == P(("pod", "data"), None)
+    # batch 16 divides pod(2)*... no: 16 % 32 != 0 -> drop "data", keep pod
+    s = sanitize_spec(P(("pod", "data"), None), (16, 128), sizes)
+    assert s == P("pod", None)
+    # rank padding: spec shorter than shape
+    s = sanitize_spec(P("model"), (64, 32, 16), sizes)
+    assert s == P("model", None, None)
+
+
+def test_cache_specs_seq_fallback_for_small_kv_heads():
+    """yi-6b: Hkv=4 < 16 -> the cache shards its sequence dim instead."""
+    import jax as _jax
+    from repro.dist.sharding import cache_specs
+    from repro.models import transformer as tfm
+
+    cfg = get_config("yi-6b")
+    cache = _jax.eval_shape(lambda: tfm.init_cache(cfg, 128, 32768))
+    specs = cache_specs(cfg, cache, ("data",), model_axis=16)
+    kv_spec = specs.layers["dense"][0]
+    assert kv_spec == P(None, ("data",), None, "model", None)
+
+    cfg2 = get_config("seamless-m4t-large-v2")  # Hkv=16 -> head sharding
+    enc = (_jax.ShapeDtypeStruct((24, 8, 16, 64, 64), jnp.bfloat16),) * 2
+    cache2 = _jax.eval_shape(
+        lambda: tfm.init_cache(cfg2, 8, 64, enc_out=enc))
+    specs2 = cache_specs(cfg2, cache2, ("data",), model_axis=16)
+    assert specs2.layers["cross_self"][0] == P(None, ("data",), "model",
+                                               None, None)
+
+
+def test_moe_row_dispatch_matches_global():
+    """Row-decomposed dispatch == single-row dispatch (same capacity math
+    when rows=1); validated numerically at tiny scale."""
+    from repro.configs.base import MoEConfig
+    from repro.models.moe import moe_ffn, moe_params_shapes
+    from repro.models.layers import dense_init
+
+    cfg_moe = MoEConfig(n_experts=4, experts_per_token=2, d_ff=16,
+                        capacity_factor=8.0)  # high cap: no drops
+    d = 8
+    shapes = moe_params_shapes(cfg_moe, d, "swiglu")
+    key = jax.random.key(0)
+    ks = jax.random.split(key, len(shapes))
+    p = {n: (jnp.zeros(s) if n.endswith("bias")
+             else dense_init(k, s, 0, jnp.float32))
+         for k, (n, s) in zip(ks, sorted(shapes.items()))}
+    x = jax.random.normal(jax.random.key(1), (4, 6, d))
+    y = moe_ffn(x, p, cfg_moe, "swiglu", jnp.float32)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    # permutation invariance across the batch (row-local dispatch must not
+    # leak across tokens): permuting batch permutes outputs identically
+    perm = jnp.array([2, 0, 3, 1])
+    y_perm = moe_ffn(x[perm], p, cfg_moe, "swiglu", jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_perm), np.asarray(y[perm]),
+                               rtol=1e-5, atol=1e-5)
