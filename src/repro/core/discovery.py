@@ -77,6 +77,21 @@ class WavefrontSchedule:
     def n_wavefronts(self) -> int:
         return max((len(s.wavefronts) for s in self.shards), default=0)
 
+    def comm_plan(self, level: int) -> Dict[Tuple[int, int], List[Message]]:
+        """The batched exchange at one wavefront: ``{(src, dst): [Message]}``,
+        deterministically ordered. All edges of a (src, dst) pair ride one
+        fused buffer — the compiled analogue of the paper's *large AM*
+        batching — so every lowering (the block executor's all_to_all tables,
+        ``repro.dist.pipeline``'s stage transfers) derives its communication
+        from this single plan rather than re-walking the PTG."""
+        groups = self.messages.get(level, {})
+        return {pair: list(groups[pair]) for pair in sorted(groups)}
+
+    def comm_pairs(self, level: int) -> List[Tuple[int, int]]:
+        """Just the (src, dst) pairs exchanging data at ``level`` — the
+        collective-permute pattern for lockstep lowerings."""
+        return sorted(self.messages.get(level, {}))
+
     def validate(self, ptg: PTG) -> None:
         """Every dependency is scheduled strictly before its dependents, and
         every cross-shard edge has a message at the producer's level."""

@@ -37,6 +37,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:
+    from jax import shard_map  # jax >= 0.5
+except ImportError:  # pragma: no cover — older jax keeps it experimental
+    from jax.experimental.shard_map import shard_map
+
 from .discovery import PTG, WavefrontSchedule, discover
 
 K = Hashable
@@ -205,7 +210,7 @@ class BlockProgram:
                 local, _ = jax.lax.scan(step, local, tabs0)
                 return local
 
-            shmapped = jax.shard_map(
+            shmapped = shard_map(
                 run, mesh=mesh,
                 in_specs=(P(axis), {k: P(axis) for k in tabs_np}),
                 out_specs=P(axis))
@@ -230,7 +235,7 @@ class BlockProgram:
                         loc0, jnp.asarray(s_i)[idx], jnp.asarray(r_i)[idx])
             return loc0[None]
 
-        return jax.shard_map(run_unrolled, mesh=mesh, in_specs=(P(axis),),
+        return shard_map(run_unrolled, mesh=mesh, in_specs=(P(axis),),
                              out_specs=P(axis))
 
 
@@ -337,10 +342,12 @@ def build_block_program(spec: BlockPTGSpec) -> BlockProgram:
             tbl[t] = (ops, out)
         tables.append(tbl)
 
-    # --- per-wavefront exchange tables (fused per (src, dst) — "large AMs")
+    # --- per-wavefront exchange tables, lowered from the schedule's fused
+    # per-(src, dst) communication plan ("large AMs" — shared with
+    # repro.dist.pipeline, which lowers the same plan to collective permutes)
     exchange: List[Tuple[np.ndarray, np.ndarray]] = []
     for w in range(W):
-        groups = sched.messages.get(w, {})
+        groups = sched.comm_plan(w)
         per_pair: Dict[Tuple[int, int], List[B]] = {}
         for (src, dst), msgs in groups.items():
             # Only data-carrying edges ride the wire (control-only edges are

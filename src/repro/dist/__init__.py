@@ -1,0 +1,31 @@
+"""repro.dist — the sharding substrate binding models to a device mesh.
+
+Architecture (PTG → discovery → WavefrontSchedule → dist exchange plan):
+an application describes its work as a parametrized task graph
+(`core.discovery.PTG`); `discover()` expands the DAG shard-locally via
+symbolic active messages and levels it into a `WavefrontSchedule`, whose
+``comm_plan(w)`` batches every cross-shard edge of wavefront *w* into one
+fused buffer per (src, dst) pair — the compiled analogue of the paper's
+large-AM copy avoidance. This package is the layer that binds those
+schedules (and ordinary pytree programs) to a concrete ``jax`` device mesh:
+
+- :mod:`repro.dist.ctx` — ambient mesh/sharding context. Model code stays
+  mesh-agnostic pytree-in/pytree-out and only calls ``annotate(x, spec)``;
+  with no mesh active that is the identity, under ``use_mesh`` it becomes a
+  sanitized ``with_sharding_constraint``. Launchers set the batch axes and
+  sequence-sharding policy once; ``act_spec()``/``data_rows()`` derive the
+  rest.
+- :mod:`repro.dist.sharding` — tree-path-driven spec derivation:
+  ``param_specs`` walks the abstract parameter pytree and assigns
+  tensor-parallel ``PartitionSpec``s by leaf name, ``cache_specs`` shards
+  decode caches (KV-head sharding with a sequence-dim fallback when the
+  architecture has fewer KV heads than the model axis), and
+  ``sanitize_spec``/``sanitize_specs`` drop mesh axes a concrete shape
+  cannot divide (rightmost-first inside tuple entries).
+- :mod:`repro.dist.pipeline` — stage-parallel execution lowered from the
+  *same* discovery layer: the GPipe-style pipeline PTG is leveled by
+  ``discover`` and each wavefront's cross-stage transfers are exactly the
+  ``comm_plan`` pairs, lowered to one collective permute per wavefront, so
+  the host PTG runtime, the block executor, and the pipeline share one
+  communication-planning layer.
+"""

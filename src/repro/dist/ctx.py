@@ -1,0 +1,99 @@
+"""Ambient mesh/sharding context — model code stays mesh-agnostic.
+
+Launchers (`repro.launch.*`) pick a mesh and declare two global policies:
+which mesh axes shard the batch (``set_batch_axes``) and whether the
+sequence dim is sharded between layers (``set_seq_shard`` — sequence
+parallelism, only legal when the model-axis size divides seq_len). Model code
+never sees the mesh; it calls ``annotate(x, spec)`` at layout boundaries,
+which is the identity until a mesh is active and a *sanitized* sharding
+constraint afterwards — so the same forward runs on one CPU device, forced
+host devices, or a production pod unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+_state = {"mesh": None, "batch_axes": None, "seq_shard": False}
+
+
+def get_mesh() -> Optional[Mesh]:
+    """The mesh installed by ``use_mesh``, or None outside any context."""
+    return _state["mesh"]
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh) -> Iterator[Mesh]:
+    """Install ``mesh`` as the ambient mesh (re-entrant, restores on exit).
+
+    Also enters the mesh's own context so bare-``PartitionSpec`` jax APIs
+    resolve axis names while the block is active.
+    """
+    prev = _state["mesh"]
+    _state["mesh"] = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _state["mesh"] = prev
+
+
+def set_batch_axes(axes: Axes) -> None:
+    """Declare the mesh axes the global batch shards over (e.g. ("pod",
+    "data")), as computed by :func:`repro.dist.sharding.batch_axis`."""
+    _state["batch_axes"] = axes
+
+
+def batch_axes() -> Axes:
+    return _state["batch_axes"]
+
+
+def set_seq_shard(on: bool) -> None:
+    """Enable sequence parallelism for inter-layer activations."""
+    _state["seq_shard"] = bool(on)
+
+
+def seq_shard() -> bool:
+    return _state["seq_shard"]
+
+
+def data_rows() -> int:
+    """Number of data-parallel rows = product of the batch-axis sizes (the
+    R in the MoE [R, T, D] row decomposition); 1 with no mesh/batch axes."""
+    mesh, axes = _state["mesh"], _state["batch_axes"]
+    if mesh is None or axes is None:
+        return 1
+    names = axes if isinstance(axes, tuple) else (axes,)
+    rows = 1
+    for name in names:
+        rows *= mesh.shape.get(name, 1)
+    return rows
+
+
+def act_spec() -> P:
+    """Layout of inter-layer activations [B, S, D]: batch over the batch
+    axes, sequence over "model" when sequence parallelism is on, D whole."""
+    return P(batch_axes(), "model" if _state["seq_shard"] else None, None)
+
+
+def annotate(x: jax.Array, spec: P) -> jax.Array:
+    """Constrain ``x`` to ``spec`` on the ambient mesh; identity without one.
+
+    The spec is sanitized against the concrete shape first (axes the shape
+    cannot divide — or that the mesh lacks — are dropped), so annotation
+    sites can state the *intended* production layout and still lower on
+    small dev meshes and reduced configs.
+    """
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    from repro.dist.sharding import sanitize_spec
+
+    spec = sanitize_spec(spec, x.shape, dict(mesh.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

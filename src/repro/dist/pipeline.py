@@ -1,0 +1,135 @@
+"""Stage-parallel (pipeline) execution lowered from PTG discovery.
+
+The pipeline is expressed as the same kind of parametrized task graph the
+host runtime executes: task (s, m) = "stage s applied to microbatch m",
+with in-deps (s-1, m) (the activation hand-off) and (s, m-1) (a stage is a
+serial resource). ``discover`` levels this PTG into the familiar GPipe
+trapezoid — wavefront(s, m) = s + m, depth = n_stages + n_micro - 1 — and
+its ``comm_plan(w)`` is exactly the set of (s, s+1) stage hand-offs live at
+step w, each a fused buffer per (src, dst) pair. The lockstep lowering here
+turns every wavefront into compute + one collective permute over that
+plan's pairs, so the host PTG runtime, the block executor
+(`core.schedule`), and this pipeline all derive communication from one
+planning layer.
+
+Backward runs by autodiff: the transpose of a collective permute is the
+reversed permute, so the gradient pipeline is the forward trapezoid
+mirrored — no hand-written schedule needed.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:
+    from jax import shard_map  # jax >= 0.5
+except ImportError:  # pragma: no cover — older jax keeps it experimental
+    from jax.experimental.shard_map import shard_map
+
+from repro.core.discovery import PTG, WavefrontSchedule, discover
+
+
+def pipeline_ptg(n_stages: int, n_micro: int) -> PTG:
+    """The pipeline's parametrized task graph; task keys are (stage, micro)."""
+
+    def in_deps(k):
+        s, m = k
+        return ([(s - 1, m)] if s > 0 else []) + ([(s, m - 1)] if m > 0 else [])
+
+    def out_deps(k):
+        s, m = k
+        return ([(s + 1, m)] if s + 1 < n_stages else []) \
+            + ([(s, m + 1)] if m + 1 < n_micro else [])
+
+    return PTG(in_deps=in_deps, out_deps=out_deps, mapping=lambda k: k[0],
+               type_of=lambda k: "stage")
+
+
+def pipeline_schedule(n_stages: int, n_micro: int) -> WavefrontSchedule:
+    """Discover + level the pipeline PTG (one shard per stage)."""
+    return discover(pipeline_ptg(n_stages, n_micro), [(0, 0)], n_stages)
+
+
+def schedule_depth(n_stages: int, n_micro: int) -> int:
+    """Pipeline depth in wavefronts — the PTG-derived GPipe bubble:
+    n_stages + n_micro - 1."""
+    return pipeline_schedule(n_stages, n_micro).n_wavefronts
+
+
+def split_microbatches(batch: Any, n_micro: int) -> Any:
+    """Reshape every leaf [B, ...] -> [n_micro, B // n_micro, ...]."""
+
+    def split(x):
+        b = x.shape[0]
+        if b % n_micro:
+            raise ValueError(f"batch {b} not divisible by {n_micro} microbatches")
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def _stage_perms(sched: WavefrontSchedule) -> List[List[Tuple[int, int]]]:
+    """Per-wavefront collective-permute patterns from the schedule's fused
+    exchange plan (each (src, dst) pair carries one batched buffer)."""
+    return [sched.comm_pairs(w) for w in range(sched.n_wavefronts)]
+
+
+def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                   stage_params: Any, xs: jax.Array, *, mesh: Mesh,
+                   axis: Optional[str] = None) -> jax.Array:
+    """Run ``n_micro`` microbatches through a stage-parallel pipeline.
+
+    ``stage_params``: pytree whose leaves stack per stage on dim 0 (length =
+    mesh axis size); ``xs``: [n_micro, mb, ...] microbatched inputs;
+    returns [n_micro, mb, ...] = stage_{S-1}(... stage_0(xs)), numerically
+    identical to applying the stages sequentially. Differentiable.
+    """
+    axis = axis or mesh.axis_names[0]
+    n_stages = mesh.shape[axis]
+    n_micro = xs.shape[0]
+    sched = pipeline_schedule(n_stages, n_micro)
+    perms = _stage_perms(sched)
+
+    def run(p_local, xs_full):
+        idx = jax.lax.axis_index(axis)
+        p = jax.tree.map(lambda a: a[0], p_local)
+        recv = jnp.zeros(xs_full.shape[1:], xs_full.dtype)
+        outs = jnp.zeros_like(xs_full)
+        for w, perm in enumerate(perms):
+            m = w - idx                       # microbatch at this stage now
+            m_c = jnp.clip(m, 0, n_micro - 1)
+            x_in = jnp.where(idx == 0, xs_full[m_c], recv)
+            y = stage_fn(p, x_in).astype(xs_full.dtype)
+            active = (m >= 0) & (m < n_micro)
+            done = active & (idx == n_stages - 1)
+            outs = outs.at[m_c].set(jnp.where(done, y, outs[m_c]))
+            if perm:                          # the wavefront's fused hand-off
+                recv = jax.lax.ppermute(y, axis, perm)
+        # only the last stage holds real outputs; broadcast to all shards
+        outs = jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    return shard_map(run, mesh=mesh, in_specs=(P(axis), P()),
+                     out_specs=P())(stage_params, xs)
+
+
+def pipeline_loss_fn(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                     loss_fn: Callable[[jax.Array, jax.Array], jax.Array],
+                     *, mesh: Mesh, n_micro: int,
+                     axis: Optional[str] = None):
+    """``loss(stage_params, batch_x, batch_y)`` through the pipeline —
+    microbatches the batch, pipelines the forward, applies ``loss_fn`` on
+    the re-assembled outputs; grads flow back through the reversed
+    pipeline by autodiff."""
+
+    def loss(stage_params, batch_x, batch_y):
+        xs = split_microbatches(batch_x, n_micro)
+        ys = pipeline_apply(stage_fn, stage_params, xs, mesh=mesh, axis=axis)
+        yh = ys.reshape(batch_x.shape[0], *ys.shape[2:])
+        return loss_fn(yh, batch_y)
+
+    return loss

@@ -1,0 +1,185 @@
+"""Tree-path-driven sharding rules: param/cache PartitionSpecs + sanitizing.
+
+Params are plain pytrees (see ``models/transformer.py``); sharding attaches
+here by *leaf name*, never inside model code:
+
+- matmul weights are tensor-parallel on the "model" axis — column-parallel
+  (last dim) by default, row-parallel (dim -2) for the output projections
+  ``wo``/``w_out``/``shared_w_out``; whichever of the two dims the model
+  axis actually divides wins, so every architecture in ``configs/`` gets a
+  real sharding for its large matrices;
+- the embedding shards its vocab dim (falling back to d_model for
+  non-divisible vocabularies);
+- MoE expert banks are expert-parallel when n_experts divides the model
+  axis (deepseek: 256/16) and shard the expert hidden dim otherwise
+  (grok: 8 experts, d_ff/16);
+- norms, biases, and other small vectors replicate.
+
+Decode caches shard KV heads on "model" when the architecture has enough of
+them; an arch with fewer KV heads than the model axis (yi-6b: 4 < 16)
+shards the cache *sequence* dim instead — the KV cache, not the weights, is
+what outgrows a chip at 32k context.
+
+``sanitize_spec`` reconciles an intended spec with a concrete shape and
+mesh: axis names the mesh lacks are dropped, and a dim that cannot divide
+the assigned axis product drops names rightmost-first (so a ("pod", "data")
+batch entry degrades to "pod" before replicating).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+# leaf names that always replicate (norm scales, small biases, SSM scalars)
+_REPLICATED = {
+    "final_norm", "enc_norm", "ln", "ln1", "ln2", "ln_cross",
+    "q_ln", "kv_ln", "q_norm", "k_norm", "norm_w",
+    "router_bias", "conv_b", "a_log", "d_skip", "dt_bias",
+}
+
+# output projections: row-parallel (prefer sharding dim -2)
+_ROW_PARALLEL = {"wo", "w_out", "shared_w_out"}
+
+
+def _matmul_spec(shape: Sequence[int], model_axis: int,
+                 *, prefer_last: bool = True) -> P:
+    """Shard one of the two trailing matmul dims on "model" — the preferred
+    dim if it divides, the other as fallback, the preferred regardless if
+    neither does (sanitize_specs drops it against a concrete mesh later)."""
+    nd = len(shape)
+    dims = (-1, -2) if prefer_last else (-2, -1)
+    pick = dims[0]
+    for d in dims:
+        if shape[d] % model_axis == 0:
+            pick = d
+            break
+    entries = [None] * nd
+    entries[pick] = "model"
+    return P(*entries)
+
+
+def param_specs(cfg: ModelConfig, *, model_axis: int = 16) -> Any:
+    """PartitionSpec pytree matching ``transformer.abstract_params(cfg)``."""
+    from repro.models import transformer as tfm
+
+    abstract = tfm.abstract_params(cfg)
+
+    def rule(path, leaf):
+        keys = [p.key if hasattr(p, "key") else str(p) for p in path]
+        name = keys[-1]
+        nd = leaf.ndim
+        if name in _REPLICATED or nd <= 1:
+            return P()
+        if name == "embed":
+            vocab, d = leaf.shape
+            return P("model", None) if vocab % model_axis == 0 \
+                else P(None, "model")
+        if "moe" in keys[:-1] and nd == 4 and name in ("w_in", "w_out",
+                                                       "w_gate"):
+            # stacked expert banks [L, E, d, f] / [L, E, f, d]
+            if leaf.shape[1] % model_axis == 0:       # expert parallelism
+                return P(None, "model", None, None)
+            return _matmul_spec(leaf.shape, model_axis,
+                                prefer_last=name != "w_out")
+        if name == "router":
+            # [L, d, E]: shard experts when possible, else the input dim
+            return _matmul_spec(leaf.shape, model_axis)
+        return _matmul_spec(leaf.shape, model_axis,
+                            prefer_last=name not in _ROW_PARALLEL)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract)
+
+
+def cache_specs(cfg: ModelConfig, cache: Any, batch_axes: Axes, *,
+                model_axis: int = 16) -> Any:
+    """Spec pytree matching a ``transformer.DecodeCache`` (or its
+    ``eval_shape``): KV caches [L, B, Hkv, S, hd] shard heads on "model"
+    when Hkv divides the model axis and fall back to sharding the sequence
+    dim otherwise; MLA latent caches [L, B, S, r] and SSM states shard
+    their large inner dims."""
+    bn = batch_axes
+    mla = cfg.attention == "mla"
+
+    def attn_rule(leaf):
+        if leaf.ndim == 5:                 # [L, B, Hkv, S, hd]
+            if leaf.shape[2] % model_axis == 0:
+                return P(None, bn, "model", None, None)
+            return P(None, bn, None, "model", None)  # seq fallback
+        if leaf.ndim == 4 and mla:         # MLA latents [L, B, S, r]
+            return P(None, bn, "model", None)
+        return P(*([None] * max(leaf.ndim - 1, 0)), bn) if leaf.ndim else P()
+
+    def ssm_rule(leaf):
+        if leaf.ndim == 5:                 # [L, B, nh, N, hd]: shard heads
+            return P(None, bn, "model", None, None)
+        if leaf.ndim == 4:                 # conv [L, B, d_conv-1, conv_dim]
+            return P(None, bn, None, "model")
+        return P()
+
+    layers = {}
+    for key, sub in cache.layers.items():
+        layers[key] = jax.tree.map(ssm_rule if key == "ssm" else attn_rule,
+                                   sub)
+    return type(cache)(pos=P(), layers=layers)
+
+
+def sanitize_spec(spec: P, shape: Sequence[int],
+                  axis_sizes: Dict[str, int]) -> P:
+    """Reconcile ``spec`` with a concrete ``shape``: pad to the shape's
+    rank, drop axis names missing from ``axis_sizes``, and for each dim
+    drop names rightmost-first until the dim divides the assigned product.
+    Single-name tuples collapse to the bare name."""
+    entries = list(spec)[: len(shape)]
+    entries += [None] * (len(shape) - len(entries))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        names = [n for n in (entry if isinstance(entry, tuple) else (entry,))
+                 if n in axis_sizes]
+        while names and dim % math.prod(axis_sizes[n] for n in names) != 0:
+            names.pop()
+        if not names:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(tuple(names))
+    return P(*out)
+
+
+def sanitize_specs(specs: Any, abstract: Any, mesh: Mesh) -> Any:
+    """Tree-wide :func:`sanitize_spec` of a spec pytree against the matching
+    abstract-value pytree and a concrete mesh."""
+    sizes = dict(mesh.shape)
+    return jax.tree.map(
+        lambda s, x: sanitize_spec(s, x.shape, sizes), specs, abstract,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def named_shardings(mesh: Mesh, specs: Any) -> Any:
+    """Spec pytree -> NamedSharding pytree on ``mesh`` (the jit/device_put
+    form every launcher needs)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_axis(mesh: Mesh, global_batch: int) -> Axes:
+    """The mesh axes the global batch shards over: all data-parallel axes
+    present in the mesh (("pod", "data") order), degraded rightmost-first
+    until the batch divides — None when it cannot shard at all."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    while axes and global_batch % math.prod(mesh.shape[a] for a in axes) != 0:
+        axes.pop()
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else tuple(axes)

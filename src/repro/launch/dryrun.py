@@ -25,7 +25,7 @@ import jax        # noqa: E402
 from repro.configs.base import SHAPES, shapes_for          # noqa: E402
 from repro.configs.registry import all_archs, get_config   # noqa: E402
 from repro.dist.ctx import set_batch_axes, set_seq_shard, use_mesh  # noqa: E402
-from repro.dist.sharding import batch_axis                 # noqa: E402
+from repro.dist.sharding import batch_axis, named_shardings  # noqa: E402
 from repro.launch.mesh import make_production_mesh         # noqa: E402
 from repro.launch.specs import input_specs                 # noqa: E402
 from repro.serve.decode import make_prefill_step, make_serve_step  # noqa: E402
@@ -121,9 +121,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             ((2,) if cell.kind == "decode" else ())
     with use_mesh(mesh):
         args, arg_specs = input_specs(cfg, cell, mesh)
-        shardings = jax.tree.map(
-            lambda s: jax.sharding.NamedSharding(mesh, s), arg_specs,
-            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        shardings = named_shardings(mesh, arg_specs)
         jitted = jax.jit(step, in_shardings=shardings,
                          donate_argnums=donate)
         lowered = jitted.lower(*args)
@@ -133,6 +131,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device kind
+        cost = cost[0] if cost else None
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
 

@@ -30,8 +30,8 @@ def main() -> None:
     from repro.configs.base import reduced as reduce_cfg
     from repro.configs.registry import get_config
     from repro.dist.ctx import set_batch_axes, set_seq_shard, use_mesh
-    from repro.dist.sharding import (batch_axis, cache_specs, param_specs,
-                                     sanitize_specs)
+    from repro.dist.sharding import (batch_axis, cache_specs, named_shardings,
+                                     param_specs, sanitize_specs)
     from repro.launch.mesh import make_production_mesh
     from repro.models import transformer as tfm
     from repro.serve.decode import make_serve_step
@@ -57,9 +57,7 @@ def main() -> None:
         p_specs = sanitize_specs(
             param_specs(cfg, model_axis=mesh.shape["model"]), params_abs,
             mesh)
-        p_sh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), p_specs,
-                            is_leaf=lambda x: isinstance(
-                                x, jax.sharding.PartitionSpec))
+        p_sh = named_shardings(mesh, p_specs)
         params = jax.jit(lambda k: tfm.init_params(cfg, k),
                          out_shardings=p_sh)(jax.random.key(0))
 

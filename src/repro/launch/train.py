@@ -43,7 +43,8 @@ def main() -> None:
     from repro.configs.base import reduced as reduce_cfg
     from repro.configs.registry import get_config
     from repro.dist.ctx import set_batch_axes, set_seq_shard, use_mesh
-    from repro.dist.sharding import batch_axis, param_specs, sanitize_specs
+    from repro.dist.sharding import (batch_axis, named_shardings,
+                                     param_specs, sanitize_specs)
     from repro.launch.mesh import make_production_mesh
     from repro.train import checkpoint as ckpt
     from repro.train.data import PackedBinaryDataset, SyntheticLM
@@ -79,12 +80,8 @@ def main() -> None:
             param_specs(cfg, model_axis=mesh.shape["model"]), p_abs[0], mesh)
         o_specs = sanitize_specs(
             opt_state_specs(p_specs, cfg.optimizer, p_abs[0]), p_abs[1], mesh)
-        p_sh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), p_specs,
-                            is_leaf=lambda x: isinstance(
-                                x, jax.sharding.PartitionSpec))
-        o_sh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), o_specs,
-                            is_leaf=lambda x: isinstance(
-                                x, jax.sharding.PartitionSpec))
+        p_sh = named_shardings(mesh, p_specs)
+        o_sh = named_shardings(mesh, o_specs)
 
         # init sharded (jit'd init writes each shard on its device)
         params, opt_state = jax.jit(

@@ -1,0 +1,101 @@
+"""repro.dist layer tests: mesh context round-trips, spec sanitization at
+annotation sites, and param_specs acceptance by jax.jit in_shardings.
+
+Runs on however many host devices the main pytest process has (usually 1) —
+the mesh is sized to the device count, so these are layout-contract tests,
+not multi-device execution tests (those live in multi_device_cases.py).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.dist import ctx
+from repro.dist.sharding import (batch_axis, named_shardings, param_specs,
+                                 sanitize_specs)
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as tfm
+
+
+def _host_mesh():
+    n = len(jax.devices())
+    model = 2 if n >= 2 else 1
+    data = 2 if n >= 4 else 1
+    return make_host_mesh(model=model, data=data)
+
+
+def test_annotate_is_identity_without_mesh():
+    x = jnp.ones((4, 8, 16))
+    y = ctx.annotate(x, P("data", None, None))
+    assert y is x
+    assert ctx.get_mesh() is None
+
+
+def test_use_mesh_round_trips_act_spec():
+    mesh = _host_mesh()
+    ctx.set_batch_axes(batch_axis(mesh, 8))
+    ctx.set_seq_shard(True)
+    try:
+        x = jnp.ones((8, 16, 32))
+        with ctx.use_mesh(mesh):
+            assert ctx.get_mesh() is mesh
+            assert ctx.data_rows() == mesh.shape["data"]
+            y = jax.jit(lambda a: ctx.annotate(a, ctx.act_spec()))(x)
+            # the constraint materializes as a NamedSharding on this mesh
+            # whose spec is the sanitized act_spec
+            from repro.dist.sharding import sanitize_spec
+            want = NamedSharding(mesh, sanitize_spec(
+                ctx.act_spec(), x.shape, dict(mesh.shape)))
+            assert y.sharding.is_equivalent_to(want, x.ndim)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+        assert ctx.get_mesh() is None
+    finally:
+        ctx.set_batch_axes(None)
+        ctx.set_seq_shard(False)
+
+
+def test_annotate_drops_axes_shape_cannot_divide():
+    mesh = _host_mesh()
+    with ctx.use_mesh(mesh):
+        # 5 rows cannot shard over any axis of size > 1; 5 % 1 == 0 keeps it
+        x = jnp.ones((5, 7))
+        y = jax.jit(lambda a: ctx.annotate(a, P("model", "data")))(x)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "deepseek-v3-671b", "mamba2-1.3b"])
+def test_param_specs_accepted_by_jit_in_shardings(arch):
+    """param_specs -> sanitize -> NamedSharding must be a valid in_shardings
+    for jax.jit (lowered abstractly: full configs, no allocation)."""
+    cfg = get_config(arch)
+    mesh = _host_mesh()
+    abstract = tfm.abstract_params(cfg)
+    specs = sanitize_specs(
+        param_specs(cfg, model_axis=mesh.shape["model"]), abstract, mesh)
+    shardings = named_shardings(mesh, specs)
+    fn = jax.jit(lambda p: jax.tree.map(lambda a: a.sum(), p),
+                 in_shardings=(shardings,))
+    lowered = fn.lower(abstract)  # raises if any spec/sharding is rejected
+    assert lowered is not None
+
+
+@pytest.mark.parametrize("arch", ["qwen3-14b", "zamba2-1.2b",
+                                  "seamless-m4t-large-v2"])
+def test_param_specs_compile_reduced(arch):
+    """End-to-end on-device check at reduced scale: sharded init executes."""
+    cfg = reduced(get_config(arch))
+    mesh = _host_mesh()
+    abstract = tfm.abstract_params(cfg)
+    specs = sanitize_specs(
+        param_specs(cfg, model_axis=mesh.shape["model"]), abstract, mesh)
+    shardings = named_shardings(mesh, specs)
+    with ctx.use_mesh(mesh):
+        params = jax.jit(lambda k: tfm.init_params(cfg, k),
+                         out_shardings=shardings)(jax.random.key(0))
+    for leaf in jax.tree.leaves(params):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
