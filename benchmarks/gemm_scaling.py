@@ -65,15 +65,21 @@ def run(report) -> None:
         report(f"gemm/blocksweep/b{b}", wall * 1e6,
                f"ntasks={nb ** 3}")
 
-    # small vs large AM: compiled comm plan (fused = large AM batching)
+    # small vs large AM: compiled comm plan (fused = large AM batching),
+    # under the dense baseline and the classified sparse/dense lowering
     for staged, tag in ((False, "eager"), (True, "staged")):
         prog = build_block_program(gemm_2d_spec(8, 2, 2, 64, staged=staged))
-        st = prog.comm_stats()
+        st = prog.comm_stats(comm="auto")
+        dense = prog.comm_stats(comm="dense")
         n_groups = sum(1 for w in prog.exchange if w[0].shape[-1] > 0)
         report(f"gemm/large_am/{tag}", 0.0,
                f"fused_buffers={n_groups};real_MB="
                f"{st['real_bytes'] / 1e6:.2f};padded_MB="
-               f"{st['padded_bytes'] / 1e6:.2f}")
+               f"{st['padded_bytes'] / 1e6:.2f};eff={st['wire_efficiency']:.3f}"
+               f";eff_dense={dense['wire_efficiency']:.3f}",
+               extra={"wire_efficiency": st["wire_efficiency"],
+                      "wire_efficiency_dense": dense["wire_efficiency"],
+                      "staged": staged})
 
     # concurrency efficiency (Fig 7h)
     base = None

@@ -1,33 +1,54 @@
 """Benchmark driver — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Modules:
-  micro_overhead    Fig 5  (no-dependency overhead, TTor vs STF)
-  micro_deps        Fig 6  (dependency-management overhead)
-  gemm_scaling      Fig 7  (distributed GEMM: scaling, block sweep, AMs)
-  cholesky_scaling  Fig 9  (distributed Cholesky: scaling, block, rho)
-  roofline          §Roofline (reads reports/dryrun JSONs)
+  micro_overhead     Fig 5  (no-dependency overhead, TTor vs STF)
+  micro_deps         Fig 6  (dependency-management overhead)
+  gemm_scaling       Fig 7  (distributed GEMM: scaling, block sweep, AMs)
+  cholesky_scaling   Fig 9  (distributed Cholesky: scaling, block, rho)
+  taskbench_scaling  Task Bench (1908.05790): dependence-pattern sweep over
+                     discovery -> comm_plan -> executor, wire efficiency
+  roofline           §Roofline (reads reports/dryrun JSONs)
+
+``--json [PATH]`` additionally writes a ``BENCH_<utc>.json`` artifact with
+every row (plus each module's structured ``extra`` payload), so
+us-per-task and wire-efficiency become a tracked trajectory across PRs —
+see ROADMAP §Perf iteration log.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import platform
 import sys
+import time
 import traceback
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; fix it up so the `benchmarks.*` imports resolve either way.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--json", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="write rows to PATH (default BENCH_<utc>.json)")
     args = ap.parse_args()
 
     from benchmarks import (cholesky_scaling, gemm_scaling, micro_deps,
-                            micro_overhead, roofline)
+                            micro_overhead, roofline, taskbench_scaling)
 
     modules = {
         "micro_overhead": micro_overhead,
         "micro_deps": micro_deps,
         "gemm_scaling": gemm_scaling,
         "cholesky_scaling": cholesky_scaling,
+        "taskbench_scaling": taskbench_scaling,
         "roofline": roofline,
     }
     if args.only:
@@ -35,9 +56,14 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failed = []
+    rows = []
 
-    def report(name: str, us: float, derived: str = "") -> None:
+    def report(name: str, us: float, derived: str = "", extra=None) -> None:
         print(f"{name},{us:.3f},{derived}", flush=True)
+        row = {"name": name, "us_per_call": us, "derived": derived}
+        if extra:
+            row.update(extra)
+        rows.append(row)
 
     for name, mod in modules.items():
         try:
@@ -45,6 +71,21 @@ def main() -> None:
         except Exception:
             failed.append(name)
             traceback.print_exc()
+
+    if args.json is not None:
+        path = args.json or time.strftime("BENCH_%Y%m%dT%H%M%SZ.json",
+                                          time.gmtime())
+        payload = {
+            "created_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "python": platform.python_version(),
+            "modules": sorted(modules),
+            "failed": failed,
+            "rows": rows,
+        }
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {path} ({len(rows)} rows)", file=sys.stderr)
+
     if failed:
         sys.exit(f"benchmark module(s) failed: {failed}")
 

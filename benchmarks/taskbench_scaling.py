@@ -1,0 +1,186 @@
+"""Task-Bench-style scaling benchmark (Slaughter et al., 1908.05790) over
+discovery -> comm_plan -> executor — the ROADMAP's fig. 4/5 analogue.
+
+Task Bench parametrizes a runtime by its *dependence pattern*: the same
+layered task grid is rerun under stencil / FFT / tree / random edges, and
+the runtime's overhead (us per task) plus its communication behavior fall
+out per pattern. Here each pattern is a block PTG fed through the same
+pipeline every app uses:
+
+    taskbench_spec -> discover (parallel, shard-local)
+                   -> build_block_program (classified comm plan)
+                   -> auto_executor (sparse/dense per-wavefront + overlap)
+
+Reported per (pattern, n_shards):
+- build_us_per_task: discovery + lowering cost (dependence management);
+- host_us_per_task:  the faithful async host runtime executing the PTG;
+- exec_us_per_task:  the compiled SPMD executor (when enough devices);
+- wire_efficiency:   real / (real + padded) bytes under the chosen
+  lowering, vs the dense all_to_all baseline — the tracked trajectory.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.discovery import PTG
+from repro.core.schedule import BlockPTGSpec, build_block_program
+from repro.linalg.host_exec import run_host_ptg
+
+PATTERNS = ("stencil", "fft", "tree", "random")
+
+
+def pattern_parents(pattern: str, l: int, i: int, width: int, *,
+                    fan: int = 3, seed: int = 0) -> List[int]:
+    """Column indices in layer ``l - 1`` that task (l, i) consumes."""
+    if pattern == "stencil":
+        return [j for j in (i - 1, i, i + 1) if 0 <= j < width]
+    if pattern == "fft":
+        stride = 1 << ((l - 1) % max(width.bit_length() - 1, 1))
+        return sorted({i, (i ^ stride) % width})
+    if pattern == "tree":
+        return sorted({(2 * i) % width, (2 * i + 1) % width})
+    if pattern == "random":
+        rng = np.random.default_rng((seed, l, i))
+        k = min(fan, width)
+        return sorted(int(j) for j in
+                      rng.choice(width, size=k, replace=False))
+    raise ValueError(f"unknown pattern {pattern!r}")
+
+
+def taskbench_spec(pattern: str, width: int, depth: int, n_shards: int,
+                   b: int = 8, *, fan: int = 3, seed: int = 0,
+                   dtype=jnp.float32) -> Tuple[BlockPTGSpec, Dict]:
+    """Layered task grid: task (l, i) RMWs its own block and reads its
+    parents' layer-(l-1) blocks. Columns map to shards in contiguous
+    chunks, so stencil comm stays neighbor-sparse while random comm
+    approaches all-to-all — the two ends Task Bench sweeps."""
+    deps: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    children: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    for l in range(1, depth):
+        for i in range(width):
+            ps = [(l - 1, j)
+                  for j in pattern_parents(pattern, l, i, width,
+                                           fan=fan, seed=seed)]
+            deps[(l, i)] = ps
+            for p in ps:
+                children.setdefault(p, []).append((l, i))
+
+    def mapping(t):
+        return t[1] * n_shards // width
+
+    def block_of(t):
+        return t
+
+    def operands(t):
+        return [t] + deps.get(t, [])
+
+    ptg = PTG(
+        in_deps=lambda t: deps.get(t, []),
+        out_deps=lambda t: children.get(t, []),
+        mapping=mapping,
+        type_of=lambda t: f"f{len(deps.get(t, []))}")
+    spec = BlockPTGSpec(
+        ptg=ptg, seeds=[(0, i) for i in range(width)], n_shards=n_shards,
+        block_shape=(b, b), block_of=block_of, operands=operands,
+        owner=mapping, dtype=dtype)
+    return spec, deps
+
+
+def taskbench_bodies(max_fan: int = 8) -> Dict[str, object]:
+    def body(*ops):
+        out = ops[0] * 0.5
+        for o in ops[1:]:
+            out = out + o
+        return out
+
+    return {f"f{k}": body for k in range(max_fan + 1)}
+
+
+def taskbench_blocks(width: int, depth: int, b: int = 8,
+                     seed: int = 0) -> Dict[Tuple[int, int], np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {(l, i): rng.standard_normal((b, b)).astype(np.float32)
+            for l in range(depth) for i in range(width)}
+
+
+def taskbench_oracle(blocks, deps, width: int, depth: int):
+    """Sequential layer-by-layer reference (same arithmetic as the bodies)."""
+    vals = {blk: arr.copy() for blk, arr in blocks.items()}
+    for l in range(depth):
+        layer = {}
+        for i in range(width):
+            out = vals[(l, i)] * 0.5
+            for d in deps.get((l, i), []):
+                out = out + vals[d]
+            layer[(l, i)] = out
+        vals.update(layer)
+    return vals
+
+
+def _np_bodies(bodies):
+    return {t: (lambda fn: (lambda *a: np.asarray(fn(*a))))(fn)
+            for t, fn in bodies.items()}
+
+
+def run(report) -> None:
+    width, depth, b = 16, 12, 8
+    n_tasks = width * depth
+    for pattern in PATTERNS:
+        for n_shards in (2, 4, 8):
+            spec, deps = taskbench_spec(pattern, width, depth, n_shards, b)
+
+            t0 = time.perf_counter()
+            prog = build_block_program(spec)
+            build_us = (time.perf_counter() - t0) / n_tasks * 1e6
+
+            auto = prog.comm_stats(comm="auto")
+            dense = prog.comm_stats(comm="dense")
+            eff, eff_dense = auto["wire_efficiency"], dense["wire_efficiency"]
+
+            blocks = taskbench_blocks(width, depth, b)
+            t0 = time.perf_counter()
+            run_host_ptg(spec, blocks, _np_bodies(taskbench_bodies()),
+                         n_threads=2)
+            host_us = (time.perf_counter() - t0) / n_tasks * 1e6
+
+            exec_us = None
+            if len(jax.devices()) >= n_shards:
+                mesh = jax.sharding.Mesh(
+                    np.array(jax.devices()[:n_shards]), ("shards",))
+                packed = jnp.asarray(prog.pack(blocks))
+                with mesh:
+                    step = jax.jit(prog.auto_executor(taskbench_bodies(),
+                                                      mesh))
+                    step(packed).block_until_ready()      # compile
+                    reps = 5
+                    t0 = time.perf_counter()
+                    for _ in range(reps):
+                        out = step(packed)
+                    out.block_until_ready()
+                    exec_us = ((time.perf_counter() - t0) / reps
+                               / n_tasks * 1e6)
+
+            report(
+                f"taskbench/{pattern}/s{n_shards}",
+                exec_us if exec_us is not None else host_us,
+                f"eff={eff:.3f};eff_dense={eff_dense:.3f};"
+                f"build_us={build_us:.1f};host_us={host_us:.1f}",
+                extra={
+                    "pattern": pattern, "n_shards": n_shards,
+                    "width": width, "depth": depth, "n_tasks": n_tasks,
+                    "wire_efficiency": eff,
+                    "wire_efficiency_dense": eff_dense,
+                    "real_bytes": auto["real_bytes"],
+                    "padded_bytes": auto["padded_bytes"],
+                    "us_per_task_build": build_us,
+                    "us_per_task_host": host_us,
+                    "us_per_task_exec": exec_us,
+                },
+            )

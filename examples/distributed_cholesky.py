@@ -20,9 +20,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import build_block_program
-from repro.linalg.cholesky import (assemble_lower, cholesky_bodies,
-                                   cholesky_spec, make_spd_blocks)
+from repro.linalg.cholesky import (assemble_lower, cholesky_executor,
+                                   cholesky_program, cholesky_spec,
+                                   make_spd_blocks)
 from repro.linalg.host_exec import run_host_ptg
 
 
@@ -57,8 +57,8 @@ def main():
     print(f"[host runtime]  N={n} on {pr}x{pc} ranks: {t_host * 1e3:7.1f} ms  "
           f"max|err|={np.abs(l_host - want).max():.2e}")
 
-    # (b) compiled backend
-    prog = build_block_program(spec)
+    # (b) compiled backend: classified sparse exchange + comm/compute overlap
+    prog = cholesky_program(nb, pr, pc, b)
     n_dev = len(jax.devices())
     if n_dev < pr * pc:
         print(f"[compiled]      only {n_dev} device(s): set XLA_FLAGS="
@@ -70,7 +70,7 @@ def main():
             np.array(jax.devices()[: pr * pc]), ("shards",))
     if n_dev >= pr * pc:
         with mesh:
-            run = jax.jit(prog.executor(cholesky_bodies(), mesh))
+            run = jax.jit(cholesky_executor(prog, mesh))
             out = prog.unpack(run(jnp.asarray(prog.pack(blocks))))  # warmup
             t0 = time.perf_counter()
             out = prog.unpack(
@@ -80,10 +80,13 @@ def main():
         print(f"[compiled SPMD] N={n} on {pr * pc} shards: "
               f"{t_comp * 1e3:7.1f} ms  "
               f"max|err|={np.abs(l_comp - want).max():.2e}")
-    st = prog.comm_stats()
+    st = prog.comm_stats(comm="auto")
+    dense = prog.comm_stats(comm="dense")
     print(f"schedule: {prog.schedule.n_wavefronts} wavefronts | wire "
           f"{st['real_bytes'] / 1e6:.2f} MB real / "
-          f"{st['padded_bytes'] / 1e6:.2f} MB padded (fused large AMs)")
+          f"{st['padded_bytes'] / 1e6:.2f} MB padded "
+          f"(efficiency {st['wire_efficiency']:.2f} vs "
+          f"{dense['wire_efficiency']:.2f} dense all_to_all)")
 
 
 if __name__ == "__main__":

@@ -58,29 +58,27 @@ def compiled_backend_demo():
     import jax
     import jax.numpy as jnp
 
-    from repro.core.schedule import build_block_program
-    from repro.linalg.cholesky import (assemble_lower, cholesky_bodies,
-                                       cholesky_spec, make_spd_blocks)
+    from repro.linalg.cholesky import (assemble_lower, cholesky_executor,
+                                       cholesky_program, make_spd_blocks)
 
     n_dev = len(jax.devices())
     pr = 2 if n_dev >= 2 else 1
     pc = 2 if n_dev >= 4 else 1
     nb, b = 4, 16
-    spec = cholesky_spec(nb, pr, pc, b)
-    prog = build_block_program(spec)
+    prog = cholesky_program(nb, pr, pc, b)
     blocks, a = make_spd_blocks(nb, b)
     mesh = jax.sharding.Mesh(np.array(jax.devices()[: pr * pc]), ("shards",))
     with mesh:
-        run = jax.jit(prog.executor(cholesky_bodies(), mesh))
+        run = jax.jit(cholesky_executor(prog, mesh))
         out = prog.unpack(run(jnp.asarray(prog.pack(blocks))))
     l = assemble_lower(out, nb, b)
     err = np.abs(l @ l.T - a).max()
     print(f"[compiled backend] {nb}x{nb}-block Cholesky on {pr * pc} "
           f"shard(s): |LL^T - A|_max = {err:.2e}")
-    stats = prog.comm_stats()
+    stats = prog.comm_stats(comm="auto")
     print(f"  schedule: {prog.schedule.n_wavefronts} wavefronts, "
-          f"{stats['real_bytes'] / 1e3:.1f} KB on the wire "
-          f"(fused large-AM buffers)")
+          f"{stats['real_bytes'] / 1e3:.1f} KB on the wire, efficiency "
+          f"{stats['wire_efficiency']:.2f} (classified sparse exchange)")
 
 
 if __name__ == "__main__":

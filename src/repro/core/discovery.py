@@ -64,6 +64,66 @@ class ShardSchedule:
     expanded: int = 0  # tasks this shard touched during discovery (locality)
 
 
+@dataclass(frozen=True)
+class CommPattern:
+    """Shape of one wavefront's exchange, classified from the message plan.
+
+    The lowering picks its collective from this: a handful of active pairs
+    (low ``density``) wants point-to-point ``ppermute`` rounds; a
+    near-complete pair set amortizes better as one ``all_to_all``. The host
+    runtime needs no such choice — its AMs are naturally sparse — so this
+    classification is exactly what the compiled path must recover to match
+    the paper's wire behavior.
+    """
+
+    level: int
+    n_shards: int
+    pair_counts: Dict[Tuple[int, int], int]  # (src, dst) -> messages
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pair_counts)
+
+    @property
+    def density(self) -> float:
+        """Active fraction of the n·(n-1) possible off-diagonal pairs."""
+        possible = self.n_shards * (self.n_shards - 1)
+        return self.n_pairs / possible if possible else 0.0
+
+    @property
+    def max_pair(self) -> int:
+        """Widest per-pair batch — the dense lowering pads every pair to it."""
+        return max(self.pair_counts.values(), default=0)
+
+    @property
+    def total(self) -> int:
+        return sum(self.pair_counts.values())
+
+    def rounds(self) -> List[List[Tuple[int, int]]]:
+        """Decompose the pair set into partial permutations (each shard sends
+        to <= 1 dst and receives from <= 1 src per round) — the schedule of
+        ``ppermute`` rounds for the sparse lowering. Greedy maximal matchings
+        over the widest-first pair list: <= 2*max_degree - 1 rounds."""
+        remaining = sorted(self.pair_counts,
+                           key=lambda p: (-self.pair_counts[p], p))
+        out: List[List[Tuple[int, int]]] = []
+        while remaining:
+            srcs: set = set()
+            dsts: set = set()
+            round_, rest = [], []
+            for pair in remaining:
+                s, d = pair
+                if s in srcs or d in dsts:
+                    rest.append(pair)
+                else:
+                    srcs.add(s)
+                    dsts.add(d)
+                    round_.append(pair)
+            out.append(sorted(round_))
+            remaining = rest
+        return out
+
+
 @dataclass
 class WavefrontSchedule:
     n_shards: int
@@ -91,6 +151,37 @@ class WavefrontSchedule:
         """Just the (src, dst) pairs exchanging data at ``level`` — the
         collective-permute pattern for lockstep lowerings."""
         return sorted(self.messages.get(level, {}))
+
+    def comm_pattern(self, level: int) -> CommPattern:
+        """Classify the exchange at ``level``: per-pair message counts and
+        pair density, from which a lowering picks sparse (ppermute rounds)
+        vs dense (all_to_all) collectives."""
+        groups = self.messages.get(level, {})
+        return CommPattern(
+            level=level, n_shards=self.n_shards,
+            pair_counts={pair: len(groups[pair]) for pair in sorted(groups)})
+
+    def halo_split(self, level: int) -> List[Tuple[List[K], List[K]]]:
+        """Split each shard's tasks at wavefront ``level`` into
+        (halo-independent, halo-dependent) sets wrt the arrivals of the
+        *previous* wavefront's exchange.
+
+        Halo-independent tasks consume no block landing at ``level - 1``'s
+        exchange, so a double-buffered lowering may run them concurrently
+        with that exchange — the compiled analogue of the paper's AM/compute
+        overlap. Task order within each set preserves wavefront order."""
+        arriving: set = set()
+        for msgs in self.messages.get(level - 1, {}).values():
+            for m in msgs:
+                if self.level_of.get(m.dst_task) == level:
+                    arriving.add(m.dst_task)
+        out: List[Tuple[List[K], List[K]]] = []
+        for s in self.shards:
+            tasks = s.wavefronts[level] if level < len(s.wavefronts) else []
+            indep = [k for k in tasks if k not in arriving]
+            dep = [k for k in tasks if k in arriving]
+            out.append((indep, dep))
+        return out
 
     def validate(self, ptg: PTG) -> None:
         """Every dependency is scheduled strictly before its dependents, and

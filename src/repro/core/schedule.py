@@ -8,9 +8,19 @@ runs *any* block PTG (GEMM, Cholesky, ...):
 
     wavefront w:  for each task type t:
                       gather operand blocks by table -> vmap(body_t) -> scatter
-                  exchange: all_to_all of the blocks crossing shards at w
+                  exchange: the blocks crossing shards at w
                       (all messages of a (src,dst) pair ride one buffer — the
                       compiled analogue of the paper's *large AM* batching)
+
+The exchange is lowered *per wavefront* from the schedule's
+:class:`~repro.core.discovery.CommPattern`: a sparse pair set becomes
+point-to-point ``ppermute`` rounds (only active pairs touch the wire); a
+dense pattern becomes one fused ``all_to_all``, padded to that wavefront's
+own width — never a global maximum. ``overlap=True`` double-buffers: a
+wavefront's exchange is *issued* before the next wavefront's
+halo-independent tasks run and only *landed* before its halo-dependent
+tasks, so XLA can run the collective concurrently with independent compute
+— the compiled analogue of the paper's AM/compute overlap (§I-C, Fig 9).
 
 Contract (checked at build time):
 - every task writes exactly one block, owned by the task's shard
@@ -29,7 +39,7 @@ from __future__ import annotations
 
 from collections import defaultdict
 from dataclasses import dataclass
-from typing import Callable, Dict, Hashable, List, Sequence, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -42,10 +52,34 @@ try:
 except ImportError:  # pragma: no cover — older jax keeps it experimental
     from jax.experimental.shard_map import shard_map
 
-from .discovery import PTG, WavefrontSchedule, discover
+from .discovery import PTG, CommPattern, WavefrontSchedule, discover
 
 K = Hashable
 B = Hashable  # block id
+
+
+@dataclass(frozen=True)
+class SparseRound:
+    """One ``ppermute`` round of a sparse exchange: a partial permutation of
+    shards, each active pair carrying up to ``width`` blocks.
+
+    ``send[s]`` — the slots shard s contributes (trash-padded to ``width``);
+    ``recv[d]`` — where shard d's arrivals land (trash for non-receivers:
+    ppermute delivers zeros there, which the trash slot absorbs)."""
+
+    perm: Tuple[Tuple[int, int], ...]   # active (src, dst) pairs
+    send: np.ndarray                    # [n_shards, width]
+    recv: np.ndarray                    # [n_shards, width]
+
+    @property
+    def width(self) -> int:
+        return self.send.shape[-1]
+
+    @property
+    def wire_slots(self) -> int:
+        """Block slots actually crossing the wire: only active pairs
+        transmit in a collective permute."""
+        return len(self.perm) * self.width
 
 
 @dataclass(frozen=True)
@@ -75,8 +109,14 @@ class BlockProgram:
     arity: Dict[str, int]
     # tables[w][t] = (ops_idx [n_shards, T, arity], out_idx [n_shards, T])
     tables: List[Dict[str, Tuple[np.ndarray, np.ndarray]]]
-    # exchange[w] = (send_idx [src, dst, M], recv_idx [dst, src, M])
+    # exchange[w] = (send_idx [src, dst, M], recv_idx [dst, src, M]) — the
+    # dense (all_to_all) lowering, padded to wavefront w's own width M.
     exchange: List[Tuple[np.ndarray, np.ndarray]]
+    # patterns[w]: the wavefront's *data-carrying* comm pattern (control-only
+    # edges already dropped) — drives the sparse/dense choice.
+    patterns: List[CommPattern]
+    # sparse_exchange[w]: ppermute-round lowering of the same plan.
+    sparse_exchange: List[List[SparseRound]]
 
     # ------------------------------------------------------------ packing
 
@@ -100,25 +140,121 @@ class BlockProgram:
 
     # ------------------------------------------------------------- stats
 
-    def comm_stats(self) -> dict:
-        """Bytes on the wire per wavefront — feeds the roofline's collective
-        term and the §Perf iteration log."""
+    def lowered_pattern(self, w: int, comm: str = "auto",
+                        density_threshold: float = 0.5) -> str:
+        """The collective wavefront ``w``'s exchange lowers to under policy
+        ``comm``: "all_to_all", "ppermute", or "none" (nothing crosses).
+
+        "auto" takes the fused all_to_all when the pair set is dense enough
+        (>= ``density_threshold`` of possible pairs) or when the ppermute
+        rounds would put at least as many slots on the wire; otherwise the
+        sparse rounds win — Cholesky's panel broadcasts, pipeline hand-offs.
+        """
+        if comm not in ("dense", "sparse", "auto"):
+            raise ValueError(f"unknown comm policy {comm!r}")
+        pat = self.patterns[w]
+        if pat.total == 0:
+            return "none"
+        if comm == "dense":
+            return "all_to_all"
+        if comm == "sparse":
+            return "ppermute"
+        n = self.spec.n_shards
+        dense_wire = n * n * self.exchange[w][0].shape[-1]
+        sparse_wire = sum(r.wire_slots for r in self.sparse_exchange[w])
+        if pat.density >= density_threshold or sparse_wire >= dense_wire:
+            return "all_to_all"
+        return "ppermute"
+
+    def comm_stats(self, *, comm: str = "dense",
+                   density_threshold: float = 0.5) -> dict:
+        """Bytes on the wire per wavefront under lowering policy ``comm``
+        ("dense" | "sparse" | "auto") — feeds the roofline's collective term
+        and the §Perf iteration log.
+
+        ``real_bytes`` is the payload (cross-shard data blocks, one copy per
+        (src, dst) pair); ``padded_bytes`` is the *wasted* wire (trash-slot
+        padding the chosen collective ships on top); ``wire_efficiency`` =
+        real / (real + padded).
+        """
         b0, b1 = self.spec.block_shape
         block_bytes = b0 * b1 * np.dtype(jnp.dtype(self.spec.dtype)).itemsize
+        n = self.spec.n_shards
         per_wave = []
-        for send, _ in self.exchange:
-            real = int((send != self.n_slots - 1).sum())
-            padded = int(np.prod(send.shape))
-            per_wave.append({"real_blocks": real, "padded_blocks": padded})
+        for w, (send, _) in enumerate(self.exchange):
+            real = self.patterns[w].total
+            choice = self.lowered_pattern(w, comm, density_threshold)
+            if choice == "all_to_all":
+                wire = n * n * send.shape[-1]
+            elif choice == "ppermute":
+                wire = sum(r.wire_slots for r in self.sparse_exchange[w])
+            else:
+                wire = 0
+            per_wave.append({
+                "pattern": choice,
+                "real_blocks": real,
+                "wire_blocks": wire,
+                "padded_blocks": wire - real,
+                "pairs": self.patterns[w].n_pairs,
+                "density": self.patterns[w].density,
+                "rounds": (len(self.sparse_exchange[w])
+                           if choice == "ppermute" else
+                           (1 if choice == "all_to_all" else 0)),
+            })
+        real_bytes = sum(w["real_blocks"] for w in per_wave) * block_bytes
+        padded_bytes = sum(w["padded_blocks"] for w in per_wave) * block_bytes
+        total = real_bytes + padded_bytes
         return {
+            "comm": comm,
             "block_bytes": block_bytes,
             "wavefronts": len(self.exchange),
-            "real_bytes": sum(w["real_blocks"] for w in per_wave) * block_bytes,
-            "padded_bytes": sum(w["padded_blocks"] for w in per_wave) * block_bytes,
+            "real_bytes": real_bytes,
+            "padded_bytes": padded_bytes,
+            "total_wire_bytes": total,
+            "wire_efficiency": real_bytes / total if total else 1.0,
             "per_wavefront": per_wave,
         }
 
     # ----------------------------------------------------------- lowering
+
+    def _split_tables(self, w: int) -> Tuple[dict, Optional[dict]]:
+        """Split ``tables[w]`` into (halo-independent, halo-dependent) parts
+        wrt the arrivals of wavefront ``w - 1``'s exchange — the slot-level
+        refinement of ``WavefrontSchedule.halo_split`` (control-only edges
+        carry no block, so a message-level "dependent" task may still be
+        slot-independent). Returns ``(tables[w], None)`` when nothing
+        arrives."""
+        if w == 0 or self.patterns[w - 1].total == 0:
+            return self.tables[w], None
+        n = self.spec.n_shards
+        recv_prev = self.exchange[w - 1][1]          # [dst, src, M]
+        arriving = [set(recv_prev[s].ravel().tolist()) - {self.trash}
+                    for s in range(n)]
+        indep_tbl: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        dep_tbl: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+        for t, (ops, out) in self.tables[w].items():
+            rows: Dict[bool, List[List[int]]] = {False: [], True: []}
+            for s in range(n):
+                split: Dict[bool, List[int]] = {False: [], True: []}
+                for i in range(out.shape[1]):
+                    if out[s, i] == self.trash:
+                        continue
+                    dep = any(int(o) in arriving[s] for o in ops[s, i])
+                    split[dep].append(i)
+                for d in (False, True):
+                    rows[d].append(split[d])
+            for d, tbl in ((False, indep_tbl), (True, dep_tbl)):
+                T = max(len(r) for r in rows[d])
+                if T == 0:
+                    continue
+                o_np = np.full((n, T, ops.shape[-1]), self.trash, np.int32)
+                u_np = np.full((n, T), self.trash, np.int32)
+                for s in range(n):
+                    for j, i in enumerate(rows[d][s]):
+                        o_np[s, j] = ops[s, i]
+                        u_np[s, j] = out[s, i]
+                tbl[t] = (o_np, u_np)
+        return indep_tbl, dep_tbl
 
     def executor(
         self,
@@ -127,20 +263,38 @@ class BlockProgram:
         axis: str = "shards",
         *,
         scan: bool = True,
+        comm: Optional[str] = None,
+        overlap: bool = False,
+        density_threshold: float = 0.5,
     ) -> Callable[[jnp.ndarray], jnp.ndarray]:
         """Build the jittable SPMD executor.
 
         ``bodies[t](*operand_blocks) -> out_block`` — pure per-block compute
         (jnp or a Pallas kernel). ``scan=True`` pads tables to uniform shapes
         and scans over wavefronts (small HLO — deep schedules);
-        ``scan=False`` unrolls and skips empty types/exchanges per wavefront
-        (tight comm — shallow schedules).
+        ``scan=False`` unrolls, choosing each wavefront's collective from its
+        :class:`CommPattern` under policy ``comm`` ("dense" | "sparse" |
+        "auto"; default "auto") with per-wavefront padding widths.
+        ``overlap=True`` (unrolled only) double-buffers the exchange: issue
+        wavefront w's collective, run w+1's halo-independent tasks, land the
+        arrivals, then run the halo-dependent tasks — compute/comm overlap.
+
+        All variants are numerically identical: same bodies over the same
+        operand values, in a dependency-respecting order.
 
         Input/output: ``blocks [n_shards, n_slots, b0, b1]`` sharded P(axis).
         """
         n = self.spec.n_shards
         if mesh.shape[axis] != n:
             raise ValueError(f"mesh axis {axis}={mesh.shape[axis]} != {n} shards")
+        if comm is None:
+            comm = "dense" if scan else "auto"
+        if scan and (comm != "dense" or overlap):
+            raise ValueError(
+                "per-wavefront comm patterns and overlap need unrolled "
+                "lowering (scan=False); scan mode is dense-only")
+        if comm not in ("dense", "sparse", "auto"):
+            raise ValueError(f"unknown comm policy {comm!r}")
 
         def wavefront_compute(local, tbl):
             # local: [n_slots, b0, b1]; tbl[t] = (ops_idx [T, ar], out_idx [T])
@@ -222,21 +376,81 @@ class BlockProgram:
             return entry
 
         # ------------------------------------------------- unrolled variant
+        # Each wavefront's exchange is *issued* as (recv_rows, buf) pairs and
+        # *landed* by scattering; with overlap the landing is deferred past
+        # the next wavefront's halo-independent compute, so the collectives
+        # have no data dependency on it and XLA's scheduler can run both
+        # concurrently.
+        W = len(self.tables)
+        choices = [self.lowered_pattern(w, comm, density_threshold)
+                   for w in range(W)]
+
+        def issue(loc0, idx, w):
+            if choices[w] == "none":
+                return []
+            if choices[w] == "all_to_all":
+                s_i, r_i = self.exchange[w]
+                buf = loc0[jnp.asarray(s_i)[idx]]    # [n, M, b0, b1]
+                buf = jax.lax.all_to_all(buf, axis, split_axis=0,
+                                         concat_axis=0, tiled=True)
+                recv = jnp.asarray(r_i)[idx].reshape(-1)
+                return [(recv, buf.reshape(-1, *loc0.shape[1:]))]
+            pending = []
+            for rnd in self.sparse_exchange[w]:      # ppermute rounds
+                buf = loc0[jnp.asarray(rnd.send)[idx]]   # [width, b0, b1]
+                buf = jax.lax.ppermute(buf, axis, list(rnd.perm))
+                pending.append((jnp.asarray(rnd.recv)[idx], buf))
+            return pending
+
+        def land(loc0, pending):
+            for recv, buf in pending:
+                loc0 = loc0.at[recv].set(buf.astype(loc0.dtype))
+            return loc0
+
+        def shard_tbl(tbl, idx):
+            return {t: (jnp.asarray(o)[idx], jnp.asarray(u)[idx])
+                    for t, (o, u) in tbl.items()}
+
         def run_unrolled(local):
             loc0 = local[0]
             idx = jax.lax.axis_index(axis)
-            for w in range(len(self.tables)):
-                tbl = {t: (jnp.asarray(o)[idx], jnp.asarray(u)[idx])
-                       for t, (o, u) in self.tables[w].items()}
-                loc0 = wavefront_compute(loc0, tbl)
-                s_i, r_i = self.exchange[w]
-                if s_i.shape[-1]:
-                    loc0 = wavefront_exchange(
-                        loc0, jnp.asarray(s_i)[idx], jnp.asarray(r_i)[idx])
+            pending: list = []
+            for w in range(W):
+                if overlap and pending:
+                    indep, dep = self._split_tables(w)
+                    loc0 = wavefront_compute(loc0, shard_tbl(indep, idx))
+                    loc0 = land(loc0, pending)
+                    if dep:
+                        loc0 = wavefront_compute(loc0, shard_tbl(dep, idx))
+                else:
+                    loc0 = land(loc0, pending)
+                    loc0 = wavefront_compute(loc0,
+                                             shard_tbl(self.tables[w], idx))
+                pending = issue(loc0, idx, w)
+            loc0 = land(loc0, pending)  # W-1 never sends; safety net
             return loc0[None]
 
         return shard_map(run_unrolled, mesh=mesh, in_specs=(P(axis),),
-                             out_specs=P(axis))
+                         out_specs=P(axis))
+
+    def auto_executor(
+        self,
+        bodies: Dict[str, Callable[..., jnp.ndarray]],
+        mesh: Mesh,
+        axis: str = "shards",
+        *,
+        unroll_cap: int = 64,
+        density_threshold: float = 0.5,
+    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """The default lowering policy, shared by every consumer (linalg
+        apps, benchmarks): shallow schedules unroll with per-wavefront
+        sparse/dense collective choice and compute/comm overlap; schedules
+        deeper than ``unroll_cap`` fall back to the compact scan HLO, where
+        uniform shapes force the dense all_to_all."""
+        if self.schedule.n_wavefronts > unroll_cap:
+            return self.executor(bodies, mesh, axis, scan=True)
+        return self.executor(bodies, mesh, axis, scan=False, comm="auto",
+                             overlap=True, density_threshold=density_threshold)
 
 
 def build_block_program(spec: BlockPTGSpec) -> BlockProgram:
@@ -346,17 +560,21 @@ def build_block_program(spec: BlockPTGSpec) -> BlockProgram:
     # per-(src, dst) communication plan ("large AMs" — shared with
     # repro.dist.pipeline, which lowers the same plan to collective permutes)
     exchange: List[Tuple[np.ndarray, np.ndarray]] = []
+    patterns: List[CommPattern] = []
+    sparse_exchange: List[List[SparseRound]] = []
     for w in range(W):
         groups = sched.comm_plan(w)
         per_pair: Dict[Tuple[int, int], List[B]] = {}
         for (src, dst), msgs in groups.items():
             # Only data-carrying edges ride the wire (control-only edges are
             # implied by wavefront ordering). Multiple consumers of a block
-            # on the same dst share one copy.
+            # on the same dst share one copy. Slot order is the stable sort
+            # key: unique per block on its owner, integer-cheap, identical
+            # across Python versions (repr ties are neither).
             blks = sorted(
                 {spec.block_of(m.src_task) for m in msgs
                  if spec.block_of(m.src_task) in set(spec.operands(m.dst_task))},
-                key=repr)
+                key=lambda blk: slot_of[blk][1])
             if blks:
                 per_pair[(src, dst)] = blks
         M = max((len(v) for v in per_pair.values()), default=0)
@@ -368,5 +586,22 @@ def build_block_program(spec: BlockPTGSpec) -> BlockProgram:
                 recv[dst, src, m] = halo_slot[(dst, blk)]
         exchange.append((send, recv))
 
+        # the same plan as ppermute rounds (sparse lowering)
+        pattern = CommPattern(
+            level=w, n_shards=n,
+            pair_counts={p: len(b) for p, b in sorted(per_pair.items())})
+        patterns.append(pattern)
+        rounds: List[SparseRound] = []
+        for perm in pattern.rounds():
+            width = max(len(per_pair[p]) for p in perm)
+            r_send = np.full((n, width), trash, np.int32)
+            r_recv = np.full((n, width), trash, np.int32)
+            for src, dst in perm:
+                for m, blk in enumerate(per_pair[(src, dst)]):
+                    r_send[src, m] = local_slot(src, blk)
+                    r_recv[dst, m] = halo_slot[(dst, blk)]
+            rounds.append(SparseRound(tuple(perm), r_send, r_recv))
+        sparse_exchange.append(rounds)
+
     return BlockProgram(spec, sched, slot_of, halo_slot, n_slots, types,
-                        arity, tables, exchange)
+                        arity, tables, exchange, patterns, sparse_exchange)

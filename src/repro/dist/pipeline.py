@@ -73,9 +73,36 @@ def split_microbatches(batch: Any, n_micro: int) -> Any:
 
 
 def _stage_perms(sched: WavefrontSchedule) -> List[List[Tuple[int, int]]]:
-    """Per-wavefront collective-permute patterns from the schedule's fused
-    exchange plan (each (src, dst) pair carries one batched buffer)."""
-    return [sched.comm_pairs(w) for w in range(sched.n_wavefronts)]
+    """Per-wavefront collective-permute patterns from the schedule's
+    classified comm plan (each (src, dst) pair carries one batched buffer).
+
+    The pipeline PTG's hand-offs are the extreme sparse case: every
+    wavefront's :class:`~repro.core.discovery.CommPattern` is one partial
+    permutation of multiplicity 1 (density ~ 1/n), so the lowering is a
+    single ``ppermute`` round — the same sparse path the block executor
+    picks below its density threshold. Checked here so a pipeline PTG
+    change that breaks the single-round shape fails loudly instead of
+    silently dropping hand-offs."""
+    perms = []
+    for w in range(sched.n_wavefronts):
+        pat = sched.comm_pattern(w)
+        rounds = pat.rounds()
+        if pat.max_pair > 1 or len(rounds) > 1:
+            raise ValueError(
+                f"wavefront {w}: stage hand-offs must form one multiplicity-1"
+                f" permutation round, got {pat.pair_counts}")
+        # overlap structure: stage 0 feeds from the host batch (the only
+        # halo-independent work per wavefront); every later stage consumes
+        # the previous wavefront's hand-off. The lockstep loop below relies
+        # on exactly this split.
+        for shard, (indep, _dep) in enumerate(sched.halo_split(w)):
+            if shard > 0 and indep:
+                raise ValueError(
+                    f"wavefront {w}: stage {shard} has halo-independent "
+                    f"tasks {indep}; pipeline stages must feed from the "
+                    "previous stage's hand-off")
+        perms.append(list(rounds[0]) if rounds else [])
+    return perms
 
 
 def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],

@@ -16,9 +16,12 @@ here by *leaf name*, never inside model code:
 - norms, biases, and other small vectors replicate.
 
 Decode caches shard KV heads on "model" when the architecture has enough of
-them; an arch with fewer KV heads than the model axis (yi-6b: 4 < 16)
-shards the cache *sequence* dim instead — the KV cache, not the weights, is
-what outgrows a chip at 32k context.
+them. An arch with fewer KV heads than the model axis (yi-6b: 4 < 16)
+*replicates* KV heads up to the axis (``kv_head_pad``) so the cache keeps
+head sharding — the sequence-dim fallback made XLA fully rematerialize the
+cache around every per-token ``dynamic_update_slice`` (the `launch.serve`
+regression in ROADMAP). Only when no even replication exists does the
+sequence fallback remain.
 
 ``sanitize_spec`` reconciles an intended spec with a concrete shape and
 mesh: axis names the mesh lacks are dropped, and a dim that cannot divide
@@ -96,6 +99,32 @@ def param_specs(cfg: ModelConfig, *, model_axis: int = 16) -> Any:
                             prefer_last=name not in _ROW_PARALLEL)
 
     return jax.tree_util.tree_map_with_path(rule, abstract)
+
+
+def kv_head_pad(cfg: ModelConfig, model_axis: int) -> int:
+    """Replication factor lifting the KV-head dim to the model axis.
+
+    GQA repeats KV heads across the query-head group anyway, so replicating
+    each head ``r`` times (cache laid out as ``repeat(kv, r, axis=heads)``)
+    changes no attention output while making the head dim divisible by the
+    model axis — head sharding survives, and the per-token cache update
+    stays local to the shard instead of rematerializing a sequence-sharded
+    buffer. Returns 1 when the cache already shards (Hkv % axis == 0) or no
+    even replication exists (axis % Hkv != 0, or the padded group would not
+    divide the query heads).
+
+    The trade: the replicated cache is ``r``× larger per device than the
+    sequence-sharded fallback it replaces (yi-6b decode_32k: 4×, still
+    fitting at 12.9 GB temp per the dryrun memory analysis — the gate any
+    new shape must pass). Spend HBM to kill the per-token full
+    rematerialization; check the ``fits_16gb`` roofline column when adding
+    bigger batch × context cells."""
+    hkv = max(cfg.n_kv_heads, 1)
+    if hkv % model_axis == 0 or model_axis % hkv != 0:
+        return 1
+    if cfg.n_heads % model_axis != 0:
+        return 1
+    return model_axis // hkv
 
 
 def cache_specs(cfg: ModelConfig, cache: Any, batch_axes: Axes, *,

@@ -30,8 +30,9 @@ def main() -> None:
     from repro.configs.base import reduced as reduce_cfg
     from repro.configs.registry import get_config
     from repro.dist.ctx import set_batch_axes, set_seq_shard, use_mesh
-    from repro.dist.sharding import (batch_axis, cache_specs, named_shardings,
-                                     param_specs, sanitize_specs)
+    from repro.dist.sharding import (batch_axis, cache_specs, kv_head_pad,
+                                     named_shardings, param_specs,
+                                     sanitize_specs)
     from repro.launch.mesh import make_production_mesh
     from repro.models import transformer as tfm
     from repro.serve.decode import make_serve_step
@@ -67,8 +68,9 @@ def main() -> None:
             enc_out = tuple(
                 jnp.zeros((cfg.n_layers, args.batch, hkv, args.max_seq, hd),
                           jnp.bfloat16) for _ in range(2))
-        cache = tfm.init_cache(cfg, args.batch, args.max_seq,
-                               enc_out=enc_out)
+        cache = tfm.init_cache(cfg, args.batch, args.max_seq, enc_out=enc_out,
+                               kv_head_pad=kv_head_pad(
+                                   cfg, mesh.shape["model"]))
         c_specs = sanitize_specs(
             cache_specs(cfg, jax.eval_shape(lambda: cache),
                         batch_axis(mesh, args.batch),

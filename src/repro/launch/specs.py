@@ -16,8 +16,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeCell
-from repro.dist.sharding import (batch_axis, cache_specs, param_specs,
-                                 sanitize_specs)
+from repro.dist.sharding import (batch_axis, cache_specs, kv_head_pad,
+                                 param_specs, sanitize_specs)
 from repro.models import transformer as tfm
 from repro.train.optimizer import make_optimizer, opt_state_specs
 
@@ -85,7 +85,8 @@ def input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh
                    _sds((cfg.n_layers, b, hkv, cell.seq_len, hd),
                         jnp.bfloat16))
     cache = jax.eval_shape(
-        lambda: tfm.init_cache(cfg, b, cell.seq_len, enc_out=enc_out))
+        lambda: tfm.init_cache(cfg, b, cell.seq_len, enc_out=enc_out,
+                               kv_head_pad=kv_head_pad(cfg, model_axis)))
     c_specs = sanitize_specs(
         cache_specs(cfg, cache, bn, model_axis=model_axis), cache, mesh)
     if cfg.embed_inputs and cfg.family != "encdec":

@@ -26,7 +26,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.discovery import PTG
-from repro.core.schedule import BlockPTGSpec
+from repro.core.schedule import BlockPTGSpec, BlockProgram, build_block_program
 
 
 # ------------------------------------------------------------- 2D mapping
@@ -207,6 +207,31 @@ def gemm_3d_spec(nb: int, q: int, b: int, *, dtype=jnp.float32) -> BlockPTGSpec:
         ptg=PTG(in_deps, out_deps, mapping, type_of),
         seeds=seeds, n_shards=q ** 3, block_shape=(b, b),
         block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+
+
+# --------------------------------------------------- program + executor
+
+def gemm_2d_program(nb: int, pr: int, pc: int, b: int, *,
+                    staged: bool = False, dtype=jnp.float32) -> BlockProgram:
+    """Discover + lower the 2D GEMM PTG onto the shared comm-planning layer
+    (classified per-wavefront patterns, dense and sparse exchange tables)."""
+    return build_block_program(
+        gemm_2d_spec(nb, pr, pc, b, staged=staged, dtype=dtype))
+
+
+def gemm_3d_program(nb: int, q: int, b: int, *, dtype=jnp.float32
+                    ) -> BlockProgram:
+    return build_block_program(gemm_3d_spec(nb, q, b, dtype=dtype))
+
+
+def gemm_executor(prog: BlockProgram, mesh, axis: str = "shards", *,
+                  matmul=None, unroll_cap: int = 64):
+    """Sparsity-aware GEMM executor. The eager 2D mapping's wavefront-0
+    broadcast is dense (all_to_all); the staged variant's per-k panel sends
+    are sparse (ppermute rounds) and overlap with the k-1 rank updates —
+    the compiled form of the paper's AM/compute overlap."""
+    return prog.auto_executor(gemm_bodies(matmul), mesh, axis,
+                              unroll_cap=unroll_cap)
 
 
 # ------------------------------------------------------------ bodies/oracle

@@ -200,6 +200,10 @@ def _gqa_decode(cfg: ModelConfig, p, x, cache_kv, pos, *, window=0):
     cos, sin = rope_freqs(pos[None], hd, cfg.rope_theta)  # [1, hd/2]
     q = apply_rope(q[:, :, None], cos, sin)[:, :, 0]
     k = apply_rope(k[:, :, None], cos, sin)[:, :, 0]
+    pad = k_cache.shape[1] // cfg.n_kv_heads  # cache with replicated heads
+    if pad > 1:
+        k = jnp.repeat(k, pad, axis=1)
+        v = jnp.repeat(v, pad, axis=1)
     slot = pos % s_max if window else pos  # ring buffer when windowed
     k_cache = jax.lax.dynamic_update_index_in_dim(k_cache, k, slot, 2)
     v_cache = jax.lax.dynamic_update_index_in_dim(v_cache, v, slot, 2)
@@ -446,8 +450,14 @@ class DecodeCache(NamedTuple):
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
-               dtype=jnp.bfloat16, enc_out=None) -> DecodeCache:
-    hd, hkv = cfg.head_dim, max(cfg.n_kv_heads, 1)
+               dtype=jnp.bfloat16, enc_out=None, *,
+               kv_head_pad: int = 1) -> DecodeCache:
+    """``kv_head_pad`` replicates each KV head that many times in the cache
+    layout (``dist.sharding.kv_head_pad`` picks the factor lifting Hkv to
+    the mesh's model axis); the GQA decode path detects the factor from the
+    cache shape and repeats its per-token k/v writes to match — attention
+    output is unchanged, head sharding survives small-Hkv archs."""
+    hd, hkv = cfg.head_dim, max(cfg.n_kv_heads, 1) * max(kv_head_pad, 1)
     window = cfg.sliding_window or 0
 
     def kv(n, s):

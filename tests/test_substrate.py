@@ -199,9 +199,11 @@ def test_sanitize_spec_drops_nondivisible_axes():
 
 
 def test_cache_specs_seq_fallback_for_small_kv_heads():
-    """yi-6b: Hkv=4 < 16 -> the cache shards its sequence dim instead."""
+    """yi-6b: Hkv=4 < 16. Unpadded the cache falls back to sequence
+    sharding; with the kv_head_pad replication factor the head dim reaches
+    the model axis and keeps head sharding (the launch paths pass it)."""
     import jax as _jax
-    from repro.dist.sharding import cache_specs
+    from repro.dist.sharding import cache_specs, kv_head_pad
     from repro.models import transformer as tfm
 
     cfg = get_config("yi-6b")
@@ -210,13 +212,49 @@ def test_cache_specs_seq_fallback_for_small_kv_heads():
     kv_spec = specs.layers["dense"][0]
     assert kv_spec == P(None, ("data",), None, "model", None)
 
+    pad = kv_head_pad(cfg, 16)
+    assert pad == 16 // cfg.n_kv_heads
+    padded = _jax.eval_shape(
+        lambda: tfm.init_cache(cfg, 128, 32768, kv_head_pad=pad))
+    assert padded.layers["dense"][0].shape[2] == 16
+    specs_p = cache_specs(cfg, padded, ("data",), model_axis=16)
+    assert specs_p.layers["dense"][0] == P(None, ("data",), "model",
+                                           None, None)
+
     cfg2 = get_config("seamless-m4t-large-v2")  # Hkv=16 -> head sharding
+    assert kv_head_pad(cfg2, 16) == 1          # already divisible: no pad
     enc = (_jax.ShapeDtypeStruct((24, 8, 16, 64, 64), jnp.bfloat16),) * 2
     cache2 = _jax.eval_shape(
         lambda: tfm.init_cache(cfg2, 8, 64, enc_out=enc))
     specs2 = cache_specs(cfg2, cache2, ("data",), model_axis=16)
     assert specs2.layers["cross_self"][0] == P(None, ("data",), "model",
                                                None, None)
+
+
+def test_kv_head_pad_decode_equivalence():
+    """A padded (head-replicated) cache decodes bit-identically to the
+    unpadded one — replication mirrors GQA's own head repeat."""
+    import jax as _jax
+    from repro.configs.base import reduced
+    from repro.models import transformer as tfm
+    from repro.serve.decode import make_serve_step
+
+    cfg = reduced(get_config("yi-6b"))      # n_heads=4, n_kv_heads=2
+    params = tfm.init_params(cfg, _jax.random.key(0))
+    step = make_serve_step(cfg)
+    tok = jnp.arange(2, dtype=jnp.int32)
+
+    outs = []
+    for pad in (1, 2):
+        cache = tfm.init_cache(cfg, 2, 16, kv_head_pad=pad)
+        t = tok
+        toks = []
+        for _ in range(4):
+            t, logits, cache = step(params, t, cache)
+            toks.append(np.asarray(logits))
+        outs.append(toks)
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a, b)
 
 
 def test_moe_row_dispatch_matches_global():
