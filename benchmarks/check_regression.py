@@ -1,0 +1,91 @@
+"""Bench-regression guard: fail CI when wire efficiency regresses.
+
+Compares a freshly produced ``BENCH_*.json`` (benchmarks/run.py --json)
+against the committed baseline artifact, case by case (rows matched by
+``name``), on a ratio metric — default ``wire_efficiency``, the tracked
+trajectory of ROADMAP §Perf iteration log. A case that drops more than
+``--tol`` (default 20%) below its baseline fails the job; new cases (no
+baseline row) and timing rows (no metric) pass through. us-per-task is
+deliberately NOT guarded: it is noisy on emulated-CPU CI, while wire
+efficiency is a deterministic property of the comm-plan lowering.
+
+    python benchmarks/check_regression.py BENCH_ci.json \
+        --baseline BENCH_20260727.json [--metric wire_efficiency] [--tol 0.2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Sequence, Tuple
+
+
+def metric_rows(rows: Sequence[dict], metric: str) -> Dict[str, float]:
+    """name -> metric for rows that carry a numeric value for it."""
+    out = {}
+    for r in rows:
+        v = r.get(metric)
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[r["name"]] = float(v)
+    return out
+
+
+def find_regressions(new_rows: Sequence[dict], base_rows: Sequence[dict], *,
+                     metric: str = "wire_efficiency",
+                     tol: float = 0.2) -> Tuple[int, List[Tuple[str, float, float]]]:
+    """Compare per-case metric values; a case regresses when
+    ``new < base * (1 - tol)``. Returns (cases compared, regressions as
+    (name, baseline, new))."""
+    base = metric_rows(base_rows, metric)
+    new = metric_rows(new_rows, metric)
+    checked = 0
+    regressions = []
+    for name, v in new.items():
+        if name not in base:
+            continue
+        checked += 1
+        if v < base[name] * (1.0 - tol):
+            regressions.append((name, base[name], v))
+    return checked, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="freshly produced BENCH json")
+    ap.add_argument("--baseline", required=True,
+                    help="committed baseline BENCH json")
+    ap.add_argument("--metric", default="wire_efficiency")
+    ap.add_argument("--tol", type=float, default=0.2,
+                    help="allowed fractional drop vs baseline (default 0.2)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.baseline) as f:
+            base_rows = json.load(f)["rows"]
+    except FileNotFoundError:
+        print(f"no baseline at {args.baseline}; nothing to guard", flush=True)
+        return 0
+    with open(args.new) as f:
+        new_rows = json.load(f)["rows"]
+
+    checked, regressions = find_regressions(
+        new_rows, base_rows, metric=args.metric, tol=args.tol)
+    print(f"{checked} case(s) compared on {args.metric} "
+          f"(tol {args.tol:.0%})")
+    if not checked:
+        # zero overlap means the metric silently vanished from the rows (or
+        # the baseline is stale) — that disarms the guard, so fail loudly
+        # rather than stay green while the tracked trajectory disappears
+        print(f"FAIL: no overlapping cases carry a numeric {args.metric}; "
+              "the guard would be a no-op. Refresh the committed baseline "
+              "or restore the metric field.", flush=True)
+        return 1
+    for name, b, v in regressions:
+        print(f"REGRESSION {name}: {args.metric} {b:.4f} -> {v:.4f} "
+              f"({v / b - 1.0:+.1%})", flush=True)
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,9 +29,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.discovery import PTG
 from repro.core.schedule import BlockPTGSpec, build_block_program
 from repro.linalg.host_exec import run_host_ptg
+from repro.ptg import Graph
 
 PATTERNS = ("stencil", "fft", "tree", "random")
 
@@ -54,43 +54,45 @@ def pattern_parents(pattern: str, l: int, i: int, width: int, *,
     raise ValueError(f"unknown pattern {pattern!r}")
 
 
+def taskbench_graph(pattern: str, width: int, depth: int, n_shards: int,
+                    b: int = 8, *, fan: int = 3, seed: int = 0,
+                    dtype=jnp.float32) -> Tuple[Graph, Dict]:
+    """Layered task grid as a declarative ``repro.ptg`` graph: task (l, i)
+    RMWs its own block and reads its parents' layer-(l-1) blocks — in/out
+    edges, operands, and seeds all derive from those access patterns.
+    Columns map to shards in contiguous chunks, so stencil comm stays
+    neighbor-sparse while random comm approaches all-to-all — the two ends
+    Task Bench sweeps. One task type per fan-in count (the block executor
+    needs fixed arity per type); legacy (l, i) task keys are preserved via
+    the ``key`` override."""
+    deps: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    for l in range(1, depth):
+        for i in range(width):
+            deps[(l, i)] = [(l - 1, j)
+                            for j in pattern_parents(pattern, l, i, width,
+                                                     fan=fan, seed=seed)]
+
+    def owner(blk) -> int:
+        return blk[1] * n_shards // width
+
+    g = Graph(f"taskbench-{pattern}", n_shards=n_shards,
+              owner=owner, block_shape=(b, b), dtype=dtype)
+    for nfan in sorted({len(d) for d in deps.values()} | {0}):
+        g.task_type(f"f{nfan}",
+                    key=lambda l, i: (l, i),
+                    writes=lambda l, i: (l, i),
+                    reads=lambda l, i: [(l, i)] + deps.get((l, i), []))
+    g.sequence(lambda: ((f"f{len(deps.get((l, i), ()))}", l, i)
+                        for l in range(depth) for i in range(width)))
+    return g, deps
+
+
 def taskbench_spec(pattern: str, width: int, depth: int, n_shards: int,
                    b: int = 8, *, fan: int = 3, seed: int = 0,
                    dtype=jnp.float32) -> Tuple[BlockPTGSpec, Dict]:
-    """Layered task grid: task (l, i) RMWs its own block and reads its
-    parents' layer-(l-1) blocks. Columns map to shards in contiguous
-    chunks, so stencil comm stays neighbor-sparse while random comm
-    approaches all-to-all — the two ends Task Bench sweeps."""
-    deps: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
-    children: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
-    for l in range(1, depth):
-        for i in range(width):
-            ps = [(l - 1, j)
-                  for j in pattern_parents(pattern, l, i, width,
-                                           fan=fan, seed=seed)]
-            deps[(l, i)] = ps
-            for p in ps:
-                children.setdefault(p, []).append((l, i))
-
-    def mapping(t):
-        return t[1] * n_shards // width
-
-    def block_of(t):
-        return t
-
-    def operands(t):
-        return [t] + deps.get(t, [])
-
-    ptg = PTG(
-        in_deps=lambda t: deps.get(t, []),
-        out_deps=lambda t: children.get(t, []),
-        mapping=mapping,
-        type_of=lambda t: f"f{len(deps.get(t, []))}")
-    spec = BlockPTGSpec(
-        ptg=ptg, seeds=[(0, i) for i in range(width)], n_shards=n_shards,
-        block_shape=(b, b), block_of=block_of, operands=operands,
-        owner=mapping, dtype=dtype)
-    return spec, deps
+    g, deps = taskbench_graph(pattern, width, depth, n_shards, b,
+                              fan=fan, seed=seed, dtype=dtype)
+    return g.to_block_spec(), deps
 
 
 def taskbench_bodies(max_fan: int = 8) -> Dict[str, object]:

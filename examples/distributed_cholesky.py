@@ -1,10 +1,11 @@
-"""The paper's flagship app end-to-end: distributed blocked Cholesky as a
-PTG, executed on BOTH backends from the same spec —
+"""The paper's flagship app end-to-end: distributed blocked Cholesky
+declared ONCE via the unified ``repro.ptg`` front-end and executed on BOTH
+backends from that single definition —
 
   (a) the host TaskTorrent runtime: async tasks + work stealing + one-sided
       active messages + distributed completion detection;
   (b) the compiled SPMD executor: parallel DAG discovery -> wavefront
-      schedule -> shard_map with fused all_to_all "large AMs".
+      schedule -> shard_map with classified sparse/dense exchanges.
 
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=4 to see real
 multi-device sharding in (b).
@@ -21,9 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.linalg.cholesky import (assemble_lower, cholesky_executor,
-                                   cholesky_program, cholesky_spec,
-                                   make_spd_blocks)
-from repro.linalg.host_exec import run_host_ptg
+                                   cholesky_graph, make_spd_blocks)
 
 
 def np_bodies():
@@ -45,20 +44,20 @@ def main():
     nb, b = args.nb, args.block
     n = nb * b
 
-    spec = cholesky_spec(nb, pr, pc, b)
+    graph = cholesky_graph(nb, pr, pc, b)   # ONE declarative definition
     blocks, a = make_spd_blocks(nb, b)
     want = np.linalg.cholesky(a)
 
-    # (a) host runtime
+    # (a) host runtime, wired from the derived out-edges
     t0 = time.perf_counter()
-    host = run_host_ptg(spec, blocks, np_bodies(), n_threads=2)
+    host = graph.run_host(blocks, np_bodies(), n_threads=2)
     t_host = time.perf_counter() - t0
     l_host = assemble_lower(host, nb, b)
     print(f"[host runtime]  N={n} on {pr}x{pc} ranks: {t_host * 1e3:7.1f} ms  "
           f"max|err|={np.abs(l_host - want).max():.2e}")
 
     # (b) compiled backend: classified sparse exchange + comm/compute overlap
-    prog = cholesky_program(nb, pr, pc, b)
+    prog = graph.to_program()
     n_dev = len(jax.devices())
     if n_dev < pr * pc:
         print(f"[compiled]      only {n_dev} device(s): set XLA_FLAGS="

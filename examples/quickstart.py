@@ -1,80 +1,89 @@
-"""Quickstart: TaskTorrent's two halves in ~80 lines.
+"""Quickstart: declare a PTG once, run it on both back-ends.
 
-1. The host runtime — the paper's §II-A3 example: a distributed PTG where
-   task k's output is shipped to the rank owning task k+1 via an active
-   message that stores the payload and fulfills the promise.
-2. The compiled backend — the same PTG idea lowered to a lockstep SPMD
-   program (here: a tiny distributed Cholesky through shard_map on however
-   many host devices are available; run with
-   XLA_FLAGS=--xla_force_host_platform_device_count=4 for real sharding).
+TaskTorrent's one-API story through the unified ``repro.ptg`` front-end:
+
+1. Declare the graph — task types with index spaces plus the blocks each
+   task reads/writes and an owner mapping. ``in_deps``/``out_deps``/
+   ``operands``/``indegree``/seeds are all *derived* (mutual inverses by
+   construction — no hand-written edge functions to get wrong).
+2. Lower the SAME definition to
+   (a) the host runtime: async Taskflow + one-sided active messages
+       generated from the derived out-edges (the paper's §II-A3 program);
+   (b) the compiled executor: parallel DAG discovery -> wavefront schedule
+       -> shard_map with classified sparse/dense collective exchanges.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+(set XLA_FLAGS=--xla_force_host_platform_device_count=4 for real sharding
+in the compiled half).
 """
 
 import numpy as np
 
-from repro.core import run_ranks
+from repro.ptg import Graph
+
+
+def declare_chain(n_ranks: int, chain: int) -> Graph:
+    """A ring of accumulating tasks: task k reads block k-1, writes block
+    k, on rank k mod n_ranks — every hand-off is a cross-rank active
+    message on the host backend, a ppermute on the compiled one."""
+    g = Graph("chain", n_shards=n_ranks, owner=lambda blk: blk[1] % n_ranks,
+              block_shape=(1, 1))
+    g.task_type("acc",
+                space=lambda: ((k,) for k in range(chain)),
+                writes=lambda k: ("v", k),
+                reads=lambda k: [("v", k - 1)] if k else [])
+    return g
 
 
 def host_runtime_demo():
     n_ranks, chain = 3, 12
+    g = declare_chain(n_ranks, chain)
+    # derived structure: one seed, a pure chain
+    assert g.seeds == [("acc", 0)]
+    assert g.out_deps(("acc", 4)) == [("acc", 5)]
 
-    def main(ctx):
-        data = {}
-        tf = ctx.taskflow("chain")
-        am = {}
-
-        tf.set_indegree(lambda k: 1)
-        tf.set_mapping(lambda k: k % ctx.tp.n_threads)
-
-        def body(k):
-            value = data.get(k, 0) + k          # "compute"
-            dest_rank = (k + 1) % ctx.n_ranks
-            if k + 1 < chain:
-                if dest_rank == ctx.rank:
-                    data[k + 1] = value
-                    tf.fulfill_promise(k + 1)
-                else:                            # one-sided active message
-                    am["am"].send(dest_rank, k + 1, value)
-
-        tf.set_task(body)
-        am["am"] = ctx.comm.make_active_msg(
-            lambda k, v: (data.__setitem__(k, v), tf.fulfill_promise(k)))
-
-        if ctx.rank == 0:
-            data[0] = 0
-            tf.fulfill_promise(0)
-        ctx.tp.join()                            # distributed completion
-        return data
-
-    results = run_ranks(n_ranks, main, n_threads=2)
-    total = {k: v for r in results for k, v in r.items()}
-    assert total[chain - 1] == sum(range(chain - 1)), total
+    blocks = {("v", k): np.zeros((1, 1)) for k in range(chain)}
+    bodies = {"acc": lambda *prev: (prev[0] if prev else 0.0) + 1.0}
+    out = g.run_host(blocks, bodies, n_threads=2)
+    total = float(out[("v", chain - 1)])
+    assert total == chain, total
     print(f"[host runtime] chain of {chain} tasks across {n_ranks} ranks: "
-          f"final value {total[chain - 1]} (= sum 0..{chain - 2})")
+          f"final value {total:.0f} (one AM per hand-off)")
 
 
 def compiled_backend_demo():
     import jax
     import jax.numpy as jnp
 
-    from repro.linalg.cholesky import (assemble_lower, cholesky_executor,
-                                       cholesky_program, make_spd_blocks)
+    from repro.linalg.cholesky import (assemble_lower, cholesky_bodies,
+                                       cholesky_graph, make_spd_blocks)
+    from repro.linalg.host_exec import as_numpy_bodies
 
     n_dev = len(jax.devices())
     pr = 2 if n_dev >= 2 else 1
     pc = 2 if n_dev >= 4 else 1
     nb, b = 4, 16
-    prog = cholesky_program(nb, pr, pc, b)
+    # ONE declarative definition (4 task types + reads/writes accesses)...
+    graph = cholesky_graph(nb, pr, pc, b)
     blocks, a = make_spd_blocks(nb, b)
+
+    # ...two lowerings. (a) host runtime:
+    host = graph.run_host(blocks, as_numpy_bodies(cholesky_bodies()))
+    l_host = assemble_lower(host, nb, b)
+
+    # (b) compiled SPMD executor:
+    prog = graph.to_program()
     mesh = jax.sharding.Mesh(np.array(jax.devices()[: pr * pc]), ("shards",))
     with mesh:
-        run = jax.jit(cholesky_executor(prog, mesh))
-        out = prog.unpack(run(jnp.asarray(prog.pack(blocks))))
-    l = assemble_lower(out, nb, b)
-    err = np.abs(l @ l.T - a).max()
-    print(f"[compiled backend] {nb}x{nb}-block Cholesky on {pr * pc} "
-          f"shard(s): |LL^T - A|_max = {err:.2e}")
+        run = jax.jit(prog.auto_executor(cholesky_bodies(), mesh))
+        comp = prog.unpack(run(jnp.asarray(prog.pack(blocks))))
+    l_comp = assemble_lower(comp, nb, b)
+
+    err = np.abs(l_comp @ l_comp.T - a).max()
+    agree = np.abs(l_comp - l_host).max()
+    print(f"[one graph, two backends] {nb}x{nb}-block Cholesky on "
+          f"{pr * pc} shard(s): |LL^T - A|_max = {err:.2e}, "
+          f"|host - compiled|_max = {agree:.2e}")
     stats = prog.comm_stats(comm="auto")
     print(f"  schedule: {prog.schedule.n_wavefronts} wavefronts, "
           f"{stats['real_bytes'] / 1e3:.1f} KB on the wire, efficiency "

@@ -44,6 +44,43 @@ class PTG:
     mapping: Callable[[K], int]
     type_of: Callable[[K], str] = lambda k: "task"
 
+    def check_consistency(self, sample_keys: Sequence[K]) -> int:
+        """Check the PTG contract on ``sample_keys``: ``in_deps``/``out_deps``
+        are mutual inverses and ``mapping`` is stable (pure).
+
+        A hand-written spec whose ``out_deps`` forgets an edge that
+        ``in_deps`` declares silently drops the message that would carry the
+        payload — the consumer just never runs (or reads garbage). Graphs
+        built with :mod:`repro.ptg` satisfy this by construction; this check
+        gives hand-written specs the same guarantee. Returns the number of
+        edges verified; raises ``ValueError`` naming the first broken edge.
+        """
+        checked = 0
+        for k in sample_keys:
+            if self.mapping(k) != self.mapping(k):
+                raise ValueError(
+                    f"mapping({k!r}) is unstable across calls; the runtime "
+                    "would route fulfillments to different shards")
+            ins = list(self.in_deps(k))
+            if [repr(d) for d in ins] != [repr(d) for d in self.in_deps(k)]:
+                raise ValueError(f"in_deps({k!r}) is unstable across calls")
+            for d in ins:
+                if not any(o == k for o in self.out_deps(d)):
+                    raise ValueError(
+                        f"in_deps({k!r}) contains {d!r} but out_deps({d!r}) "
+                        f"does not contain {k!r}: the producer would never "
+                        "fulfill (or send to) this task — its promise, and "
+                        "any payload riding it, is silently dropped")
+                checked += 1
+            for d in self.out_deps(k):
+                if not any(i == k for i in self.in_deps(d)):
+                    raise ValueError(
+                        f"out_deps({k!r}) contains {d!r} but in_deps({d!r}) "
+                        f"does not contain {k!r}: the fulfillment would "
+                        "over-decrement the consumer's dependency counter")
+                checked += 1
+        return checked
+
 
 @dataclass
 class Message:
@@ -196,7 +233,8 @@ class WavefrontSchedule:
                                for m in group), (d, k)
 
 
-def discover(ptg: PTG, seeds: Sequence[K], n_shards: int) -> WavefrontSchedule:
+def discover(ptg: PTG, seeds: Sequence[K], n_shards: int, *,
+             validate: bool = False) -> WavefrontSchedule:
     """Message-driven parallel discovery (run symbolically, shard-local).
 
     Implemented as a bulk-synchronous emulation of the asynchronous runtime:
@@ -204,6 +242,11 @@ def discover(ptg: PTG, seeds: Sequence[K], n_shards: int) -> WavefrontSchedule:
     posting discovery messages for remote out-edges; messages are delivered
     between rounds. Wavefront level(k) = 1 + max(level of deps) — the ALAP/
     ASAP leveling the lockstep lowering needs.
+
+    ``validate=True`` additionally runs :meth:`PTG.check_consistency` over
+    every discovered task, so hand-written in/out-edge pairs get the same
+    mutual-inverse guarantee the :mod:`repro.ptg` builder provides by
+    construction.
     """
     shards = [ShardSchedule(s) for s in range(n_shards)]
     # per-shard discovery state — *disjoint by construction*; a shard only
@@ -259,6 +302,8 @@ def discover(ptg: PTG, seeds: Sequence[K], n_shards: int) -> WavefrontSchedule:
         raise ValueError(
             f"{len(leftover)} task(s) never became ready (unreachable deps or "
             f"wrong indegree), e.g. {leftover[:3]}")
+    if validate:
+        ptg.check_consistency(list(level_of))
     sched = WavefrontSchedule(n_shards, shards, dict(messages), level_of)
     # normalize: same number of wavefronts everywhere (lockstep lowering)
     depth = sched.n_wavefronts

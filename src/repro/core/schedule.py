@@ -453,10 +453,16 @@ class BlockProgram:
                              overlap=True, density_threshold=density_threshold)
 
 
-def build_block_program(spec: BlockPTGSpec) -> BlockProgram:
-    """Discover the schedule and build all index tables (host side, numpy)."""
+def build_block_program(spec: BlockPTGSpec, *,
+                        validate: bool = False) -> BlockProgram:
+    """Discover the schedule and build all index tables (host side, numpy).
+
+    ``validate=True`` additionally runs ``PTG.check_consistency`` over every
+    discovered task (mutual-inverse in/out edges + mapping stability) —
+    recommended for hand-written specs; :mod:`repro.ptg` graphs carry the
+    guarantee by construction."""
     ptg, n = spec.ptg, spec.n_shards
-    sched = discover(ptg, spec.seeds, n)
+    sched = discover(ptg, spec.seeds, n, validate=validate)
     sched.validate(ptg)
 
     # --- slot assignment: owned blocks first, then halo copies, then trash.

@@ -43,6 +43,7 @@ class STFGraph:
         self._readers_since_write: Dict[Hashable, List[_Node]] = {}
         self._lock = threading.Lock()
         self._remaining = 0
+        self._executed = False
 
     def submit(
         self,
@@ -76,7 +77,19 @@ class STFGraph:
         self._nodes.append(node)
 
     def execute(self) -> None:
-        """Release roots, run the whole DAG, block until done."""
+        """Release roots, run the whole DAG, block until done.
+
+        One-shot: execution consumes the per-node ``indegree`` counters, so
+        a second call would see every node at zero and release the whole DAG
+        at once, silently ignoring all dependencies. Build a fresh STFGraph
+        (re-submitting the tasks) to run again.
+        """
+        if self._executed:
+            raise RuntimeError(
+                "STFGraph.execute() already ran; dependency counters are "
+                "consumed and a re-run would ignore every edge. Build a "
+                "fresh STFGraph and re-submit the tasks to run again.")
+        self._executed = True
         self._remaining = len(self._nodes)
         done = threading.Event()
         lock = threading.Lock()

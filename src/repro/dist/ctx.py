@@ -44,6 +44,24 @@ def use_mesh(mesh: Mesh) -> Iterator[Mesh]:
         _state["mesh"] = prev
 
 
+@contextlib.contextmanager
+def suspend_annotations() -> Iterator[None]:
+    """Trace a region with ``annotate`` as the identity (ambient mesh
+    hidden), without leaving the mesh's axis-name context.
+
+    Needed when model code runs *inside* an explicit ``shard_map`` (the
+    pipeline-parallel train step): all mesh axes are manual there, so a
+    ``with_sharding_constraint`` on the ambient mesh is both illegal and
+    meaningless — the shard_map's own specs already fix the layout.
+    """
+    prev = _state["mesh"]
+    _state["mesh"] = None
+    try:
+        yield
+    finally:
+        _state["mesh"] = prev
+
+
 def set_batch_axes(axes: Axes) -> None:
     """Declare the mesh axes the global batch shards over (e.g. ("pod",
     "data")), as computed by :func:`repro.dist.sharding.batch_axis`."""

@@ -1,9 +1,11 @@
 """Stage-parallel (pipeline) execution lowered from PTG discovery.
 
-The pipeline is expressed as the same kind of parametrized task graph the
-host runtime executes: task (s, m) = "stage s applied to microbatch m",
-with in-deps (s-1, m) (the activation hand-off) and (s, m-1) (a stage is a
-serial resource). ``discover`` levels this PTG into the familiar GPipe
+The pipeline is expressed through the unified ``repro.ptg`` builder as the
+same kind of parametrized task graph every app declares: task (s, m) =
+"stage s applied to microbatch m" writes activation block ("act", s, m)
+and reads ("act", s-1, m) (the hand-off), with an ``after`` control edge
+(s, m-1) (a stage is a serial resource) — the edge functions are derived,
+not hand-written. ``discover`` levels this PTG into the familiar GPipe
 trapezoid — wavefront(s, m) = s + m, depth = n_stages + n_micro - 1 — and
 its ``comm_plan(w)`` is exactly the set of (s, s+1) stage hand-offs live at
 step w, each a fused buffer per (src, dst) pair. The lockstep lowering here
@@ -30,28 +32,40 @@ try:
 except ImportError:  # pragma: no cover — older jax keeps it experimental
     from jax.experimental.shard_map import shard_map
 
-from repro.core.discovery import PTG, WavefrontSchedule, discover
+from repro.core.discovery import PTG, WavefrontSchedule
+from repro.ptg import Graph
+
+
+def pipeline_graph(n_stages: int, n_micro: int) -> Graph:
+    """The pipeline as a declarative ``repro.ptg`` graph: task (s, m) writes
+    activation block ("act", s, m) and reads the previous stage's hand-off
+    ("act", s-1, m); the serial-resource edge (s, m-1) is a pure control
+    ``after`` edge. Hand-off data deps, stage sequencing, and the single
+    seed (0, 0) all derive from those declarations. Task keys stay the
+    legacy (stage, micro) tuples."""
+    g = Graph("pipeline", n_shards=n_stages, owner=lambda blk: blk[1])
+    g.task_type(
+        "stage",
+        space=lambda: ((s, m) for s in range(n_stages)
+                       for m in range(n_micro)),
+        key=lambda s, m: (s, m),
+        writes=lambda s, m: ("act", s, m),
+        reads=lambda s, m: [("act", s - 1, m)] if s else [],
+        after=lambda s, m: [(s, m - 1)] if m else [])
+    return g
 
 
 def pipeline_ptg(n_stages: int, n_micro: int) -> PTG:
     """The pipeline's parametrized task graph; task keys are (stage, micro)."""
-
-    def in_deps(k):
-        s, m = k
-        return ([(s - 1, m)] if s > 0 else []) + ([(s, m - 1)] if m > 0 else [])
-
-    def out_deps(k):
-        s, m = k
-        return ([(s + 1, m)] if s + 1 < n_stages else []) \
-            + ([(s, m + 1)] if m + 1 < n_micro else [])
-
-    return PTG(in_deps=in_deps, out_deps=out_deps, mapping=lambda k: k[0],
-               type_of=lambda k: "stage")
+    return pipeline_graph(n_stages, n_micro).to_ptg()
 
 
 def pipeline_schedule(n_stages: int, n_micro: int) -> WavefrontSchedule:
-    """Discover + level the pipeline PTG (one shard per stage)."""
-    return discover(pipeline_ptg(n_stages, n_micro), [(0, 0)], n_stages)
+    """Discover + level the pipeline PTG (one shard per stage). Validation
+    is on: the builder guarantees mutual-inverse edges by construction, and
+    ``check_consistency`` re-asserts it over every discovered task (cheap at
+    stage-graph sizes)."""
+    return pipeline_graph(n_stages, n_micro).to_schedule(validate=True)
 
 
 def schedule_depth(n_stages: int, n_micro: int) -> int:

@@ -23,6 +23,12 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=None)
     ap.add_argument("--global-batch", type=int, default=None)
     ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--pipeline", type=int, default=0, metavar="STAGES",
+                    help="stage-parallel training on a ('pipe', 'data', "
+                         "'model') mesh: the layer stack splits into STAGES "
+                         "pipeline stages (repro.dist.pipeline; stage graph "
+                         "from the repro.ptg builder). Microbatch count = "
+                         "--microbatch if > 1 else 2*STAGES (GPipe rule).")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--reduced", action="store_true",
                     help="reduced config (CPU-scale)")
@@ -50,7 +56,9 @@ def main() -> None:
     from repro.train.data import PackedBinaryDataset, SyntheticLM
     from repro.train.elastic import StragglerDetector
     from repro.train.optimizer import make_optimizer, opt_state_specs
-    from repro.train.train_step import init_train_state, make_train_step
+    from repro.train.train_step import (init_train_state,
+                                        make_pipeline_train_step,
+                                        make_train_step)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -59,7 +67,20 @@ def main() -> None:
     global_batch = args.global_batch or (8 if args.reduced else 256)
 
     n_dev = len(jax.devices())
-    if n_dev >= 512 and args.multi_pod:
+    if args.pipeline > 1:
+        # stage parallelism: ("pipe", "data", "model") — the ROADMAP's
+        # pipeline_apply wiring; stage graph from the unified PTG builder
+        from repro.models.transformer import layer_kinds
+
+        if set(layer_kinds(cfg)) != {"dense"}:
+            sys.exit(f"--pipeline supports the dense family for now; "
+                     f"{cfg.name} is {cfg.family!r}")
+        if n_dev % args.pipeline:
+            sys.exit(f"--pipeline {args.pipeline} does not divide "
+                     f"{n_dev} devices")
+        mesh = jax.make_mesh((args.pipeline, n_dev // args.pipeline, 1),
+                             ("pipe", "data", "model"))
+    elif n_dev >= 512 and args.multi_pod:
         mesh = make_production_mesh(multi_pod=True)
     elif n_dev >= 256:
         mesh = make_production_mesh()
@@ -78,6 +99,16 @@ def main() -> None:
             lambda: init_train_state(cfg, jax.random.key(0)))
         p_specs = sanitize_specs(
             param_specs(cfg, model_axis=mesh.shape["model"]), p_abs[0], mesh)
+        if args.pipeline > 1:
+            # per-stage parameter stacking: each stage holds its slice of
+            # the layer stack (dim 0 of every "dense" leaf over "pipe")
+            from jax.sharding import PartitionSpec as P
+
+            if cfg.n_layers % args.pipeline:
+                sys.exit(f"{cfg.n_layers} layers do not split into "
+                         f"{args.pipeline} equal pipeline stages")
+            p_specs["dense"] = jax.tree.map(lambda _: P("pipe"),
+                                            p_abs[0]["dense"])
         o_specs = sanitize_specs(
             opt_state_specs(p_specs, cfg.optimizer, p_abs[0]), p_abs[1], mesh)
         p_sh = named_shardings(mesh, p_specs)
@@ -107,9 +138,21 @@ def main() -> None:
                              else None, encdec=cfg.family == "encdec",
                              learnable=args.reduced)
 
-        step_fn = jax.jit(
-            make_train_step(cfg, lr=args.lr, microbatches=args.microbatch),
-            donate_argnums=(0, 1))
+        if args.pipeline > 1:
+            n_micro = (args.microbatch if args.microbatch > 1
+                       else 2 * args.pipeline)
+            if global_batch % n_micro:
+                sys.exit(f"batch {global_batch} does not split into "
+                         f"{n_micro} microbatches")
+            step_fn = jax.jit(
+                make_pipeline_train_step(cfg, mesh, lr=args.lr,
+                                         n_micro=n_micro),
+                donate_argnums=(0, 1))
+        else:
+            step_fn = jax.jit(
+                make_train_step(cfg, lr=args.lr,
+                                microbatches=args.microbatch),
+                donate_argnums=(0, 1))
         saver = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
         monitor = StragglerDetector()
 

@@ -1,4 +1,5 @@
-"""Distributed blocked Cholesky as a PTG — the paper's §III-C benchmark app.
+"""Distributed blocked Cholesky as a declarative PTG — the paper's §III-C
+flagship app, declared once through the unified ``repro.ptg`` front-end.
 
 Right-looking variant of Algorithm 1, in the PTG form of Fig 8:
 
@@ -7,13 +8,17 @@ Right-looking variant of Algorithm 1, in the PTG form of Fig 8:
     syrk(k,i):       A_ii  -= L_ik · L_ikᵀ                    (i > k)
     gemm(k,i,j):     A_ij  -= L_ik · L_jkᵀ                    (i > j > k)
 
+Each task type declares only the blocks it reads and the block it writes;
+the whole dependency web of Fig 8 — panel broadcasts, trailing-update
+chains, the syrk→potrf hand-off down the diagonal — is *derived* by the
+builder from those access patterns over the factorization's sequential
+program order (``Graph.sequence``), with in/out edges mutual inverses by
+construction.
+
 Blocks are 2D block-cyclic on a pr×pc grid. Factor blocks L_ik get fresh
 block ids (single assignment) because they cross shards: potrf/trsm results
 are exactly the payloads the paper ships via (large) active messages, while
 the A_ij update accumulations stay owner-local (read-modify-write).
-
-Priorities follow the paper's reference [5] in spirit: tasks on the
-critical path (small k first, potrf > trsm > updates) are preferred.
 """
 
 from __future__ import annotations
@@ -24,93 +29,51 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.discovery import PTG
 from repro.core.schedule import BlockPTGSpec, BlockProgram, build_block_program
+from repro.ptg import Graph
 
 
-def cholesky_spec(nb: int, pr: int, pc: int, b: int,
-                  dtype=jnp.float32) -> BlockPTGSpec:
+def cholesky_graph(nb: int, pr: int, pc: int, b: int,
+                   dtype=jnp.float32) -> Graph:
     def owner(blk) -> int:
         _, i, j = blk
         return (i % pr) * pc + (j % pc)
 
-    def block_of(t):
-        tt = t[0]
-        if tt == "potrf":                        # ("potrf", k)
-            return ("L", t[1], t[1])
-        if tt == "trsm":                         # ("trsm", i, k)
-            return ("L", t[1], t[2])
-        if tt == "syrk":                         # ("syrk", k, i)
-            return ("A", t[2], t[2])
-        _, k, i, j = t                           # ("gemm", k, i, j)
-        return ("A", i, j)
+    g = Graph("cholesky", n_shards=pr * pc, owner=owner,
+              block_shape=(b, b), dtype=dtype)
+    g.task_type("potrf",
+                writes=lambda k: ("L", k, k),
+                reads=lambda k: [("A", k, k)])
+    g.task_type("trsm",
+                writes=lambda i, k: ("L", i, k),
+                reads=lambda i, k: [("A", i, k), ("L", k, k)])
+    g.task_type("syrk",
+                writes=lambda k, i: ("A", i, i),
+                reads=lambda k, i: [("A", i, i), ("L", i, k)])
+    g.task_type("gemm",
+                writes=lambda k, i, j: ("A", i, j),
+                reads=lambda k, i, j: [("A", i, j), ("L", i, k), ("L", j, k)])
 
-    def mapping(t):
-        return owner(block_of(t))
+    def program():
+        # the right-looking factorization's sequential order: the access
+        # scan over this order reproduces Fig 8's PTG edge-for-edge
+        for k in range(nb):
+            yield ("potrf", k)
+            for i in range(k + 1, nb):
+                yield ("trsm", i, k)
+            for i in range(k + 1, nb):
+                yield ("syrk", k, i)
+            for i in range(k + 1, nb):
+                for j in range(k + 1, i):
+                    yield ("gemm", k, i, j)
 
-    def operands(t):
-        tt = t[0]
-        if tt == "potrf":
-            k = t[1]
-            return [("A", k, k)]
-        if tt == "trsm":
-            _, i, k = t
-            return [("A", i, k), ("L", k, k)]
-        if tt == "syrk":
-            _, k, i = t
-            return [("A", i, i), ("L", i, k)]
-        _, k, i, j = t
-        return [("A", i, j), ("L", i, k), ("L", j, k)]
+    g.sequence(program)
+    return g
 
-    def in_deps(t):
-        tt = t[0]
-        if tt == "potrf":
-            k = t[1]
-            return [] if k == 0 else [("syrk", k - 1, k)]
-        if tt == "trsm":
-            _, i, k = t
-            deps = [("potrf", k)]
-            if k > 0:
-                deps.append(("gemm", k - 1, i, k))
-            return deps
-        if tt == "syrk":
-            _, k, i = t
-            deps = [("trsm", i, k)]
-            if k > 0:
-                deps.append(("syrk", k - 1, i))
-            return deps
-        _, k, i, j = t
-        deps = [("trsm", i, k), ("trsm", j, k)]
-        if k > 0:
-            deps.append(("gemm", k - 1, i, j))
-        return deps
 
-    def out_deps(t):
-        tt = t[0]
-        out = []
-        if tt == "potrf":
-            k = t[1]
-            out = [("trsm", i, k) for i in range(k + 1, nb)]
-        elif tt == "trsm":
-            _, i, k = t
-            out.append(("syrk", k, i))
-            out.extend(("gemm", k, i, j) for j in range(k + 1, i))
-            out.extend(("gemm", k, i2, i) for i2 in range(i + 1, nb))
-        elif tt == "syrk":
-            _, k, i = t
-            out.append(("potrf", i) if i == k + 1 else ("syrk", k + 1, i))
-        else:
-            _, k, i, j = t
-            out.append(("trsm", i, j) if j == k + 1 else ("gemm", k + 1, i, j))
-        return out
-
-    def type_of(t):
-        return t[0]
-
-    return BlockPTGSpec(
-        ptg=PTG(in_deps, out_deps, mapping, type_of),
-        seeds=[("potrf", 0)], n_shards=pr * pc, block_shape=(b, b),
-        block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+def cholesky_spec(nb: int, pr: int, pc: int, b: int,
+                  dtype=jnp.float32) -> BlockPTGSpec:
+    return cholesky_graph(nb, pr, pc, b, dtype=dtype).to_block_spec()
 
 
 def cholesky_program(nb: int, pr: int, pc: int, b: int,

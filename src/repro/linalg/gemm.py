@@ -1,21 +1,25 @@
-"""Distributed block GEMM as a PTG — the paper's §III-B benchmark app.
+"""Distributed block GEMM as a declarative PTG — the paper's §III-B app.
 
-Two mappings, as in the paper:
+Two mappings, as in the paper, both declared once through the unified
+``repro.ptg`` front-end (task types + reads/writes access patterns); all
+edge functions — including the per-k accumulation chains and the broadcast
+out-edges of the send tasks — are *derived*, not hand-written:
 
-- **2D block-cyclic** (`gemm_2d_spec`): C_ij owned by shard
-  (i mod pr, j mod pc); contributions A_ik·B_kj are sequenced in k on the
-  owner of C_ij — the exact `gemm_Cikj` PTG of the paper (indegree
-  ``k == 0 ? 2 : 3``), with send tasks broadcasting A along grid rows and B
-  along grid columns via (compiled) active messages.
-- **3D DNS** (`gemm_3d_spec`): the k-range is sliced into q slabs; each slab
-  plane computes a partial product which a reduction chain sums into C —
-  less comm per plane, one extra reduction stage (paper Fig 7a-b/d).
+- **2D block-cyclic** (`gemm_2d_graph`): C_ij owned by shard
+  (i mod pr, j mod pc); contributions A_ik·B_kj sequence in k on the owner
+  of C_ij automatically, because every k-step read-modify-writes the same
+  C block — the exact `gemm_Cikj` PTG of the paper (indegree
+  ``k == 0 ? 2 : 3``), with send tasks broadcasting A along grid rows and
+  B along grid columns via (compiled) active messages.
+- **3D DNS** (`gemm_3d_graph`): the k-range is sliced into q slabs; each
+  slab plane accumulates a partial product which a reduction chain sums
+  into C — less comm per plane, one extra reduction stage (Fig 7a-b/d).
 
-``staged=True`` threads a chain through the send tasks so the A_ik / B_kj
-broadcasts happen at wavefront k instead of all at wavefront 0: the
-compiled schedule then overlaps each step's exchange with the previous
-step's compute and needs O(nb/p) message buffers instead of O(nb²/p²) —
-a beyond-paper scheduling optimization measured in §Perf.
+``staged=True`` adds an ``after`` control chain through the send tasks so
+the A_ik / B_kj broadcasts happen at wavefront k instead of all at
+wavefront 0: the compiled schedule then overlaps each step's exchange with
+the previous step's compute and needs O(nb/p) message buffers instead of
+O(nb²/p²) — a beyond-paper scheduling optimization measured in §Perf.
 """
 
 from __future__ import annotations
@@ -25,89 +29,54 @@ from typing import Dict, Tuple
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core.discovery import PTG
 from repro.core.schedule import BlockPTGSpec, BlockProgram, build_block_program
+from repro.ptg import Graph
 
 
 # ------------------------------------------------------------- 2D mapping
 
-def gemm_2d_spec(nb: int, pr: int, pc: int, b: int, *, staged: bool = False,
-                 dtype=jnp.float32) -> BlockPTGSpec:
-    """nb×nb blocks of size b×b on a pr×pc shard grid."""
+def gemm_2d_graph(nb: int, pr: int, pc: int, b: int, *, staged: bool = False,
+                  dtype=jnp.float32) -> Graph:
+    """nb×nb blocks of size b×b on a pr×pc shard grid, declared once."""
 
     def owner(blk) -> int:
         kind, r, c = blk
         return (r % pr) * pc + (c % pc)
 
-    def mapping(k):
-        if k[0] == "gemm":                       # ("gemm", i, kk, j)
-            _, i, _, j = k
-            return owner(("C", i, j))
-        _, i, kk = k                             # ("sa"|"sb", row, col)
-        return owner(("A" if k[0] == "sa" else "B", i, kk))
+    g = Graph("gemm2d", n_shards=pr * pc, owner=owner,
+              block_shape=(b, b), dtype=dtype)
+    g.task_type(
+        "sa",
+        space=lambda: ((i, kk) for i in range(nb) for kk in range(nb)),
+        writes=lambda i, kk: ("A", i, kk),
+        reads=lambda i, kk: [("A", i, kk)],          # identity "send" body
+        after=(lambda i, kk: [("sa", i, kk - 1)] if kk else [])
+        if staged else None)
+    g.task_type(
+        "sb",
+        space=lambda: ((kk, j) for kk in range(nb) for j in range(nb)),
+        writes=lambda kk, j: ("B", kk, j),
+        reads=lambda kk, j: [("B", kk, j)],
+        after=(lambda kk, j: [("sb", kk - 1, j)] if kk else [])
+        if staged else None)
+    g.task_type(
+        "gemm",
+        space=lambda: ((i, kk, j) for i in range(nb)
+                       for kk in range(nb) for j in range(nb)),
+        writes=lambda i, kk, j: ("C", i, j),         # RMW => k-chain derived
+        reads=lambda i, kk, j: [("C", i, j), ("A", i, kk), ("B", kk, j)])
+    return g
 
-    def _step(t) -> int:
-        # the k-step a send task belongs to: sa(i, k) -> k; sb(k, j) -> k
-        return t[2] if t[0] == "sa" else t[1]
 
-    def in_deps(t):
-        if t[0] == "gemm":
-            _, i, kk, j = t
-            deps = [("sa", i, kk), ("sb", kk, j)]
-            if kk > 0:
-                deps.append(("gemm", i, kk - 1, j))
-            return deps
-        if staged and _step(t) > 0:              # send chain: step k waits k-1
-            return [("sa", t[1], t[2] - 1) if t[0] == "sa"
-                    else ("sb", t[1] - 1, t[2])]
-        return []
-
-    def out_deps(t):
-        if t[0] == "gemm":
-            _, i, kk, j = t
-            return [("gemm", i, kk + 1, j)] if kk + 1 < nb else []
-        if t[0] == "sa":
-            _, i, kk = t
-            out = [("gemm", i, kk, j) for j in range(nb)]
-            if staged and kk + 1 < nb:
-                out.append(("sa", i, kk + 1))
-        else:
-            _, kk, j = t
-            out = [("gemm", i, kk, j) for i in range(nb)]
-            if staged and kk + 1 < nb:
-                out.append(("sb", kk + 1, j))
-        return out
-
-    def block_of(t):
-        if t[0] == "gemm":
-            return ("C", t[1], t[3])
-        return ("A", t[1], t[2]) if t[0] == "sa" else ("B", t[1], t[2])
-
-    def operands(t):
-        if t[0] == "gemm":
-            _, i, kk, j = t
-            return [("C", i, j), ("A", i, kk), ("B", kk, j)]
-        return [block_of(t)]                     # identity "send" body
-
-    def type_of(t):
-        return t[0]
-
-    if staged:
-        seeds = [("sa", i, 0) for i in range(nb)] + \
-                [("sb", 0, j) for j in range(nb)]
-    else:
-        seeds = [("sa", i, kk) for i in range(nb) for kk in range(nb)] + \
-                [("sb", kk, j) for kk in range(nb) for j in range(nb)]
-
-    return BlockPTGSpec(
-        ptg=PTG(in_deps, out_deps, mapping, type_of),
-        seeds=seeds, n_shards=pr * pc, block_shape=(b, b),
-        block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+def gemm_2d_spec(nb: int, pr: int, pc: int, b: int, *, staged: bool = False,
+                 dtype=jnp.float32) -> BlockPTGSpec:
+    return gemm_2d_graph(nb, pr, pc, b, staged=staged,
+                         dtype=dtype).to_block_spec()
 
 
 # ------------------------------------------------------------- 3D mapping
 
-def gemm_3d_spec(nb: int, q: int, b: int, *, dtype=jnp.float32) -> BlockPTGSpec:
+def gemm_3d_graph(nb: int, q: int, b: int, *, dtype=jnp.float32) -> Graph:
     """DNS mapping on a q×q×q grid: slab l owns k in [l·nb/q, (l+1)·nb/q)."""
     assert nb % q == 0, "nb must divide into q slabs"
     kb = nb // q  # blocks per slab
@@ -132,81 +101,42 @@ def gemm_3d_spec(nb: int, q: int, b: int, *, dtype=jnp.float32) -> BlockPTGSpec:
         _, i, j = blk                            # final C on slab 0
         return shard(0, i, j)
 
-    def mapping(t):
-        return owner(block_of(t))
+    g = Graph("gemm3d", n_shards=q ** 3, owner=owner,
+              block_shape=(b, b), dtype=dtype)
+    g.task_type(
+        "sa",
+        space=lambda: ((i, kk) for i in range(nb) for kk in range(nb)),
+        writes=lambda i, kk: ("A", i, kk),
+        reads=lambda i, kk: [("A", i, kk)])
+    g.task_type(
+        "sb",
+        space=lambda: ((kk, j) for kk in range(nb) for j in range(nb)),
+        writes=lambda kk, j: ("B", kk, j),
+        reads=lambda kk, j: [("B", kk, j)])
+    g.task_type(
+        "gemm",                                  # slab-local k-chain on P
+        space=lambda: ((i, kk, j) for i in range(nb)
+                       for kk in range(nb) for j in range(nb)),
+        writes=lambda i, kk, j: ("P", i, j, slab(kk)),
+        reads=lambda i, kk, j: [("P", i, j, slab(kk)),
+                                ("A", i, kk), ("B", kk, j)])
+    g.task_type(
+        "fin",                                   # close the slab's partial
+        space=lambda: ((i, j, l) for i in range(nb)
+                       for j in range(nb) for l in range(q)),
+        writes=lambda i, j, l: ("Pf", i, j, l),
+        reads=lambda i, j, l: [("P", i, j, l)])
+    g.task_type(
+        "red",                                   # C += Pf_l reduction chain
+        space=lambda: ((i, j, l) for i in range(nb)
+                       for j in range(nb) for l in range(q)),
+        writes=lambda i, j, l: ("C", i, j),
+        reads=lambda i, j, l: [("C", i, j), ("Pf", i, j, l)])
+    return g
 
-    def block_of(t):
-        tt = t[0]
-        if tt == "gemm":
-            _, i, kk, j = t
-            return ("P", i, j, slab(kk))
-        if tt == "sa":
-            return ("A", t[1], t[2])
-        if tt == "sb":
-            return ("B", t[1], t[2])
-        if tt == "fin":                          # ("fin", i, j, l)
-            return ("Pf", t[1], t[2], t[3])
-        return ("C", t[1], t[2])                 # ("red", i, j, l)
 
-    def operands(t):
-        tt = t[0]
-        if tt == "gemm":
-            _, i, kk, j = t
-            return [("P", i, j, slab(kk)), ("A", i, kk), ("B", kk, j)]
-        if tt in ("sa", "sb"):
-            return [block_of(t)]
-        if tt == "fin":
-            return [("P", t[1], t[2], t[3])]
-        _, i, j, l = t                           # red: C += Pf_l
-        return [("C", i, j), ("Pf", i, j, l)]
-
-    def in_deps(t):
-        tt = t[0]
-        if tt == "gemm":
-            _, i, kk, j = t
-            deps = [("sa", i, kk), ("sb", kk, j)]
-            if kk % kb > 0:
-                deps.append(("gemm", i, kk - 1, j))
-            return deps
-        if tt in ("sa", "sb"):
-            return []
-        if tt == "fin":
-            _, i, j, l = t
-            return [("gemm", i, (l + 1) * kb - 1, j)]
-        _, i, j, l = t                           # red
-        deps = [("fin", i, j, l)]
-        if l > 0:
-            deps.append(("red", i, j, l - 1))
-        return deps
-
-    def out_deps(t):
-        tt = t[0]
-        if tt == "gemm":
-            _, i, kk, j = t
-            if kk % kb + 1 < kb:
-                return [("gemm", i, kk + 1, j)]
-            return [("fin", i, j, slab(kk))]
-        if tt == "sa":
-            _, i, kk = t
-            return [("gemm", i, kk, j) for j in range(nb)]
-        if tt == "sb":
-            _, kk, j = t
-            return [("gemm", i, kk, j) for i in range(nb)]
-        if tt == "fin":
-            _, i, j, l = t
-            return [("red", i, j, l)]
-        _, i, j, l = t                           # red
-        return [("red", i, j, l + 1)] if l + 1 < q else []
-
-    def type_of(t):
-        return t[0]
-
-    seeds = [("sa", i, kk) for i in range(nb) for kk in range(nb)] + \
-            [("sb", kk, j) for kk in range(nb) for j in range(nb)]
-    return BlockPTGSpec(
-        ptg=PTG(in_deps, out_deps, mapping, type_of),
-        seeds=seeds, n_shards=q ** 3, block_shape=(b, b),
-        block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+def gemm_3d_spec(nb: int, q: int, b: int, *, dtype=jnp.float32) -> BlockPTGSpec:
+    return gemm_3d_graph(nb, q, b, dtype=dtype).to_block_spec()
 
 
 # --------------------------------------------------- program + executor

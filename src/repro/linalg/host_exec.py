@@ -8,18 +8,96 @@ block which stores the payload and fulfills the remote promise.
 The exact same :class:`~repro.core.schedule.BlockPTGSpec` also lowers to the
 compiled SPMD executor — tests assert both backends agree with the oracle,
 which is the reproduction's core correctness claim: one PTG, two runtimes.
+``wire_taskflow`` is the per-rank wiring generator; it is also what
+``repro.ptg.Graph.to_taskflow`` emits, so declaratively-built graphs and
+hand-written specs share one host lowering.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Hashable
+from typing import Callable, Dict, Hashable, Tuple
 
 import numpy as np
 
 from repro.core import run_ranks
 from repro.core.schedule import BlockPTGSpec
+from repro.core.taskflow import Taskflow
 
 K = Hashable
+
+
+def as_numpy_bodies(bodies: Dict[str, Callable]) -> Dict[str, Callable]:
+    """Adapt jnp compute bodies (the compiled executor's) to the host
+    runtime's numpy stores: operands go in as jax arrays, results come out
+    as numpy — so one ``bodies`` dict serves both back-ends."""
+    import jax.numpy as jnp
+
+    return {t: (lambda fn: (lambda *args: np.asarray(
+        fn(*map(jnp.asarray, args)))))(fn) for t, fn in bodies.items()}
+
+
+def wire_taskflow(
+    ctx,
+    spec: BlockPTGSpec,
+    store: Dict[Hashable, np.ndarray],
+    bodies: Dict[str, Callable[..., np.ndarray]],
+    *,
+    name: str = "ptg",
+) -> Tuple[Taskflow, Callable[[], None]]:
+    """Generate one rank's host-runtime wiring for ``spec``.
+
+    Builds a :class:`Taskflow` whose
+    - ``indegree`` comes from the spec's in-edges (seeds carry one
+      synthetic dependency, fulfilled by the seed function);
+    - task body gathers operands from ``store``, runs the type's compute
+      body, stores the written block, and walks the *derived out-edges*:
+      local consumers get ``fulfill_promise``, remote consumers get a
+      one-sided active message carrying the block iff they read it.
+
+    Returns ``(taskflow, seed_fn)``; the caller seeds and joins:
+
+        tf, seed = wire_taskflow(ctx, spec, store, bodies)
+        seed()
+        ctx.tp.join()
+    """
+    ptg, n = spec.ptg, spec.n_shards
+    rank = ctx.rank
+    tf = ctx.taskflow(name)
+    am_holder = {}
+
+    tf.set_indegree(lambda k: max(len(ptg.in_deps(k)), 1))
+    # distributed mapping -> rank; thread mapping spreads dep management
+    tf.set_mapping(lambda k: hash(k) % ctx.tp.n_threads)
+
+    def body(k):
+        ops = [store[blk] for blk in spec.operands(k)]
+        out = np.asarray(bodies[ptg.type_of(k)](*ops))
+        store[spec.block_of(k)] = out
+        for d in ptg.out_deps(k):
+            dest = ptg.mapping(d) % n
+            if dest == rank:
+                tf.fulfill_promise(d)
+            else:
+                # the AM carries the block iff the consumer reads it
+                payload = (out if spec.block_of(k) in set(spec.operands(d))
+                           else None)
+                am_holder["am"].send(dest, d, spec.block_of(k), payload)
+
+    tf.set_task(body)
+
+    def on_am(d, blk, payload):
+        if payload is not None:
+            store[blk] = np.asarray(payload)
+        tf.fulfill_promise(d)
+
+    am_holder["am"] = ctx.comm.make_active_msg(on_am)
+
+    def seed():
+        for k in spec.seeds:
+            if ptg.mapping(k) % n == rank:
+                tf.fulfill_promise(k)
+
+    return tf, seed
 
 
 def run_host_ptg(
@@ -32,7 +110,7 @@ def run_host_ptg(
 ) -> Dict[Hashable, np.ndarray]:
     """Execute the PTG on ``spec.n_shards`` emulated ranks; returns all
     written blocks (gathered to the host)."""
-    ptg, n = spec.ptg, spec.n_shards
+    n = spec.n_shards
 
     def main(ctx):
         rank = ctx.rank
@@ -41,39 +119,8 @@ def run_host_ptg(
             blk: np.array(arr) for blk, arr in blocks.items()
             if spec.owner(blk) % n == rank
         }
-        tf = ctx.taskflow("ptg")
-        am_holder = {}
-
-        tf.set_indegree(lambda k: max(len(ptg.in_deps(k)), 1))
-        # distributed mapping -> rank; thread mapping spreads dep management
-        tf.set_mapping(lambda k: hash(k) % ctx.tp.n_threads)
-
-        def body(k):
-            ops = [store[blk] for blk in spec.operands(k)]
-            out = np.asarray(bodies[ptg.type_of(k)](*ops))
-            store[spec.block_of(k)] = out
-            for d in ptg.out_deps(k):
-                dest = ptg.mapping(d) % n
-                if dest == rank:
-                    tf.fulfill_promise(d)
-                else:
-                    # the AM carries the block iff the consumer reads it
-                    payload = (out if spec.block_of(k) in set(spec.operands(d))
-                               else None)
-                    am_holder["am"].send(dest, d, spec.block_of(k), payload)
-
-        tf.set_task(body)
-
-        def on_am(d, blk, payload):
-            if payload is not None:
-                store[blk] = np.asarray(payload)
-            tf.fulfill_promise(d)
-
-        am_holder["am"] = ctx.comm.make_active_msg(on_am)
-
-        for k in spec.seeds:
-            if ptg.mapping(k) % n == rank:
-                tf.fulfill_promise(k)
+        _, seed = wire_taskflow(ctx, spec, store, bodies)
+        seed()
         ctx.tp.join()
         # return only owned blocks (halo copies are transient)
         return {blk: arr for blk, arr in store.items()

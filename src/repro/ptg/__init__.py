@@ -1,0 +1,19 @@
+"""repro.ptg — the unified declarative PTG front-end.
+
+Declare a parametrized task graph once (task types + reads/writes access
+patterns + owner mapping); the builder derives ``in_deps`` / ``out_deps`` /
+``operands`` / ``block_of`` / ``indegree`` / seeds with the mutual-inverse
+property guaranteed by construction, and the same :class:`Graph` lowers to
+
+- the **host runtime** (``Graph.to_taskflow`` / ``Graph.run_host``:
+  Taskflow + active-message wiring generated from the derived out-edges);
+- the **compiled executor** (``Graph.to_block_spec`` / ``Graph.to_program``:
+  parallel discovery -> wavefront schedule -> shard_map lowering).
+
+See ``src/repro/ptg/graph.py`` for the model and README's "Declaring a
+PTG" for the migration guide.
+"""
+
+from .graph import Graph, TaskType, checked_ptg
+
+__all__ = ["Graph", "TaskType", "checked_ptg"]

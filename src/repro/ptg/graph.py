@@ -1,0 +1,366 @@
+"""Declarative PTG builder — one graph definition, two lowerings.
+
+TaskTorrent's headline API is a *single* parametrized task graph
+(``set_indegree`` / ``set_task`` / ``set_mapping``, §II-A) from which the
+distributed DAG is discovered in parallel. Hand-writing that PTG for the
+compiled layer means supplying ``in_deps`` AND ``out_deps`` and keeping
+them mutual inverses by eye — get one edge wrong and the payload it should
+carry is silently never sent. This module derives both sides from what an
+application can state declaratively (the Specx/StarPU data-access model,
+arXiv 2308.15964):
+
+- **task types** over typed index spaces (``task_type(name, space=...)``);
+- per task, the block it ``writes`` and the blocks it ``reads`` (ordered —
+  this is the compute body's operand list), plus optional ``after`` edges
+  for pure control sequencing (staged send chains, serial resources);
+- a ``Graph``-level ``owner`` mapping blocks to shards ("owner computes":
+  a task runs on the shard owning the block it writes).
+
+Dependency derivation runs the classic sequential-semantics access scan
+(RAW / WAR / WAW hazards over the program order) across the enumerated
+index space, recording every edge **from both ends at once** — so
+``in_deps`` and ``out_deps`` are mutual inverses *by construction*, and
+``indegree``, ``operands``, ``block_of``, and the seed set all fall out of
+the same declarations. The derived edge functions reproduce the
+hand-written specs of every app in this repo exactly (task-for-task,
+edge-for-edge, order-for-order — asserted by ``tests/test_ptg_builder.py``
+against frozen legacy copies).
+
+One ``Graph`` then lowers to **both** back-ends:
+
+- ``to_taskflow(ctx, store, bodies)`` — the host runtime: a ``Taskflow``
+  whose fulfill/active-message wiring is generated from the derived
+  out-edges (``run_host`` is the multi-rank convenience wrapper);
+- ``to_block_spec()`` / ``to_program()`` — the compiled executor:
+  a :class:`~repro.core.schedule.BlockPTGSpec` fed through parallel
+  discovery and the classified comm-plan lowering.
+
+For *unbounded* index spaces (where enumeration is impossible) write the
+``PTG`` directly with a user-supplied inverse rule and validate it with
+:func:`checked_ptg` / :meth:`PTG.check_consistency` — the sampled form of
+the same guarantee.
+"""
+
+from __future__ import annotations
+
+from typing import (Callable, Dict, Hashable, Iterable, List, Optional,
+                    Sequence, Tuple)
+
+import jax.numpy as jnp
+
+from repro.core.discovery import PTG, WavefrontSchedule, discover
+
+K = Hashable  # task key (as the app knows it, e.g. ("gemm", i, k, j))
+B = Hashable  # block id
+
+
+class TaskType:
+    """One task family: an index space plus block-access declarations.
+
+    ``writes(*idx)`` — the single block the task writes (owner computes);
+    ``reads(*idx)``  — blocks read, in the compute body's operand order
+                       (include the written block to read-modify-write it);
+    ``after(*idx)``  — keys of *earlier* tasks to sequence behind (control
+                       edges that carry no data: staged send chains, serial
+                       resources);
+    ``space()``      — index-tuple enumerator; its order is the sequential
+                       program order unless the Graph supplies an
+                       interleaved ``sequence``;
+    ``key(*idx)``    — task-key override (default ``(name, *idx)``) so
+                       existing key shapes survive the migration;
+    ``mapping(*idx)``— shard override (default: owner of the written block).
+    """
+
+    def __init__(self, name: str, *,
+                 writes: Callable[..., B],
+                 reads: Optional[Callable[..., Sequence[B]]] = None,
+                 after: Optional[Callable[..., Sequence[K]]] = None,
+                 space: Optional[Callable[[], Iterable]] = None,
+                 key: Optional[Callable[..., K]] = None,
+                 mapping: Optional[Callable[..., int]] = None):
+        self.name = name
+        self.writes = writes
+        self.reads = reads
+        self.after = after
+        self.space = space
+        self.key = key
+        self.mapping = mapping
+
+    def key_of(self, idx: Tuple) -> K:
+        return self.key(*idx) if self.key is not None else (self.name, *idx)
+
+
+class Graph:
+    """Declarative PTG: register task types, then lower to either back-end.
+
+    The graph is finalized lazily (first query or lowering triggers
+    :meth:`build`); after that the derived ``in_deps`` / ``out_deps`` /
+    ``operands`` / ``block_of`` / ``mapping`` / ``type_of`` behave as the
+    pure functions the ``PTG`` contract expects, and ``seeds`` holds the
+    zero-indegree tasks in program order.
+    """
+
+    def __init__(self, name: str, *, n_shards: int,
+                 owner: Callable[[B], int],
+                 block_shape: Tuple[int, int] = (1, 1),
+                 dtype=jnp.float32):
+        self.name = name
+        self.n_shards = n_shards
+        self.owner = owner
+        self.block_shape = block_shape
+        self.dtype = dtype
+        self._types: Dict[str, TaskType] = {}
+        self._sequence: Optional[Callable[[], Iterable[Tuple]]] = None
+        self._built = False
+
+    # ------------------------------------------------------- declaration
+
+    def task_type(self, name: str, **kwargs) -> TaskType:
+        """Register a task family (see :class:`TaskType` for the fields)."""
+        if self._built:
+            raise RuntimeError(f"graph {self.name!r} is already built")
+        if name in self._types:
+            raise ValueError(f"task type {name!r} already registered")
+        t = TaskType(name, **kwargs)
+        self._types[name] = t
+        return t
+
+    def sequence(self, program: Callable[[], Iterable[Tuple]]) -> None:
+        """Supply the sequential program order explicitly: a callable
+        yielding ``(type_name, *index)`` tuples. Needed whenever types must
+        interleave for sequential semantics (Cholesky's per-panel potrf /
+        trsm / update rounds, Task-Bench's layer order); without it, types
+        enumerate whole in registration order."""
+        if self._built:
+            raise RuntimeError(f"graph {self.name!r} is already built")
+        self._sequence = program
+
+    def _program_iter(self) -> Iterable[Tuple[TaskType, Tuple]]:
+        if self._sequence is not None:
+            for entry in self._sequence():
+                tname = entry[0]
+                if tname not in self._types:
+                    raise ValueError(
+                        f"sequence yielded unknown task type {tname!r}")
+                yield self._types[tname], tuple(entry[1:])
+            return
+        for t in self._types.values():
+            if t.space is None:
+                raise ValueError(
+                    f"task type {t.name!r} has no index space and the graph "
+                    "has no sequence(); one of the two must enumerate it")
+            for idx in t.space():
+                yield t, idx if isinstance(idx, tuple) else (idx,)
+
+    # -------------------------------------------------------- derivation
+
+    def build(self) -> "Graph":
+        """Derive the full edge structure (idempotent).
+
+        Sequential-semantics access scan, exactly the STF inference
+        (``repro.core.stf``) but producing a *keyed, statically queryable*
+        PTG instead of an eagerly-scheduled DAG: for each task in program
+        order, RAW edges from the last writer of each read block, then
+        WAR/WAW edges guarding the written block, then declared ``after``
+        control edges. Each edge is recorded in the producer's out-list and
+        the consumer's in-list in the same step — mutual inverse by
+        construction.
+        """
+        if self._built:
+            return self
+        self._in: Dict[K, List[K]] = {}
+        self._operands: Dict[K, List[B]] = {}
+        self._block: Dict[K, B] = {}
+        self._type: Dict[K, str] = {}
+        self._map: Dict[K, int] = {}
+        self._tasks: List[K] = []
+
+        last_writer: Dict[B, K] = {}
+        readers: Dict[B, List[K]] = {}          # readers since last write
+        out_data: Dict[K, List[K]] = {}
+        out_after: Dict[K, List[K]] = {}
+
+        for t, idx in self._program_iter():
+            k = t.key_of(idx)
+            if k in self._in:
+                raise ValueError(f"duplicate task key {k!r}")
+            blk_w = t.writes(*idx)
+            rds = list(t.reads(*idx)) if t.reads is not None else []
+
+            deps: List[K] = []
+            seen = {k}                           # never self-depend
+            def _add(d):
+                if d is not None and d not in seen:
+                    seen.add(d)
+                    deps.append(d)
+            for blk in rds:                      # RAW, in operand order
+                _add(last_writer.get(blk))
+            for r in readers.get(blk_w, ()):     # WAR
+                _add(r)
+            _add(last_writer.get(blk_w))         # WAW
+            for d in deps:
+                out_data.setdefault(d, []).append(k)
+
+            if t.after is not None:
+                for d in t.after(*idx):
+                    if d not in self._in:
+                        raise ValueError(
+                            f"task {k!r}: after-edge {d!r} does not name an "
+                            "earlier task (sequential semantics require "
+                            "control edges to point backwards)")
+                    if d not in seen:
+                        seen.add(d)
+                        deps.append(d)
+                        out_after.setdefault(d, []).append(k)
+
+            self._in[k] = deps
+            self._operands[k] = rds
+            self._block[k] = blk_w
+            self._type[k] = t.name
+            self._map[k] = (t.mapping(*idx) if t.mapping is not None
+                            else self.owner(blk_w))
+            self._tasks.append(k)
+
+            last_writer[blk_w] = k
+            readers[blk_w] = [k] if blk_w in rds else []
+            for blk in rds:
+                if blk != blk_w:
+                    readers.setdefault(blk, []).append(k)
+
+        # data consumers first (in program order), then control consumers —
+        # matching the convention of the hand-written specs this replaces.
+        self._out: Dict[K, List[K]] = {
+            k: out_data.get(k, []) + out_after.get(k, [])
+            for k in self._tasks}
+        self._seeds: List[K] = [k for k in self._tasks if not self._in[k]]
+        self._built = True
+        return self
+
+    # ---------------------------------------------------- derived queries
+
+    def _get(self, table: str, k: K):
+        self.build()
+        try:
+            return getattr(self, table)[k]
+        except KeyError:
+            raise KeyError(f"unknown task {k!r} in graph {self.name!r}")
+
+    def in_deps(self, k: K) -> Sequence[K]:
+        return self._get("_in", k)
+
+    def out_deps(self, k: K) -> Sequence[K]:
+        return self._get("_out", k)
+
+    def operands(self, k: K) -> Sequence[B]:
+        return self._get("_operands", k)
+
+    def block_of(self, k: K) -> B:
+        return self._get("_block", k)
+
+    def type_of(self, k: K) -> str:
+        return self._get("_type", k)
+
+    def mapping(self, k: K) -> int:
+        return self._get("_map", k)
+
+    def indegree(self, k: K) -> int:
+        return len(self._get("_in", k))
+
+    @property
+    def tasks(self) -> List[K]:
+        """All task keys in sequential program order."""
+        self.build()
+        return self._tasks
+
+    @property
+    def seeds(self) -> List[K]:
+        """Zero-indegree tasks in program order — the discovery roots."""
+        self.build()
+        return self._seeds
+
+    @property
+    def n_tasks(self) -> int:
+        self.build()
+        return len(self.tasks)
+
+    # ---------------------------------------------------------- lowerings
+
+    def to_ptg(self) -> PTG:
+        """The statically queryable PTG (consistent by construction)."""
+        self.build()
+        return PTG(in_deps=self.in_deps, out_deps=self.out_deps,
+                   mapping=self.mapping, type_of=self.type_of)
+
+    def to_block_spec(self, *, block_shape: Optional[Tuple[int, int]] = None,
+                      dtype=None):
+        """Lower to the compiled layer's application contract
+        (:class:`~repro.core.schedule.BlockPTGSpec`) — feed it to
+        ``build_block_program`` / ``run_host_ptg`` exactly like a
+        hand-written spec."""
+        from repro.core.schedule import BlockPTGSpec
+
+        self.build()
+        return BlockPTGSpec(
+            ptg=self.to_ptg(), seeds=self.seeds, n_shards=self.n_shards,
+            block_shape=block_shape or self.block_shape,
+            block_of=self.block_of, operands=self.operands,
+            owner=self.owner, dtype=dtype or self.dtype)
+
+    def to_program(self, *, validate: bool = False):
+        """Discover + lower to a :class:`~repro.core.schedule.BlockProgram`
+        (per-wavefront tables + classified comm plan), ready for
+        ``auto_executor``."""
+        from repro.core.schedule import build_block_program
+
+        return build_block_program(self.to_block_spec(), validate=validate)
+
+    def to_schedule(self, *, validate: bool = False) -> WavefrontSchedule:
+        """Just the parallel-discovery schedule (wavefronts + comm plan)."""
+        self.build()
+        return discover(self.to_ptg(), self.seeds, self.n_shards,
+                        validate=validate)
+
+    def to_taskflow(self, ctx, store, bodies, *, name: Optional[str] = None):
+        """Host-runtime lowering for one emulated rank: a wired
+        :class:`~repro.core.taskflow.Taskflow` whose task bodies compute on
+        ``store`` and whose cross-rank out-edges send active messages, all
+        generated from the derived edges. Returns ``(taskflow, seed_fn)``;
+        call ``seed_fn()`` to fulfill this rank's seeds, then join the
+        threadpool."""
+        from repro.linalg.host_exec import wire_taskflow
+
+        return wire_taskflow(ctx, self.to_block_spec(), store, bodies,
+                             name=name or self.name)
+
+    def run_host(self, blocks, bodies, *, n_threads: int = 2,
+                 timeout: float = 120.0):
+        """Execute on the host TaskTorrent runtime (async tasks + active
+        messages) across ``n_shards`` emulated ranks; returns the written
+        blocks gathered to the host."""
+        from repro.linalg.host_exec import run_host_ptg
+
+        return run_host_ptg(self.to_block_spec(), blocks, bodies,
+                            n_threads=n_threads, timeout=timeout)
+
+    def __repr__(self) -> str:
+        state = (f"{len(self._tasks)} tasks, {len(self._seeds)} seeds"
+                 if self._built else "unbuilt")
+        return (f"Graph({self.name!r}, n_shards={self.n_shards}, "
+                f"types={list(self._types)}, {state})")
+
+
+def checked_ptg(in_deps: Callable[[K], Sequence[K]],
+                out_deps: Callable[[K], Sequence[K]],
+                mapping: Callable[[K], int],
+                type_of: Callable[[K], str] = lambda k: "task",
+                *, sample_keys: Sequence[K] = ()) -> PTG:
+    """Wrap user-supplied edge rules (the unbounded-index-space escape
+    hatch, where enumeration — and therefore the :class:`Graph` builder —
+    is impossible) into a PTG, validating the mutual-inverse property on
+    ``sample_keys`` up front. ``discover(..., validate=True)`` re-checks
+    every task it actually expands."""
+    ptg = PTG(in_deps=in_deps, out_deps=out_deps, mapping=mapping,
+              type_of=type_of)
+    if sample_keys:
+        ptg.check_consistency(sample_keys)
+    return ptg

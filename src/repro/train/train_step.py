@@ -58,6 +58,73 @@ def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
     return train_step
 
 
+def make_pipeline_train_step(cfg: ModelConfig, mesh, *, lr: float = 3e-4,
+                             n_micro: int, axis: str = "pipe"):
+    """Pipeline-parallel train step over a ("pipe", "data", "model") mesh.
+
+    The transformer's layer stack is split into ``mesh.shape[axis]`` equal
+    stages; microbatches flow through ``repro.dist.pipeline.pipeline_apply``
+    (whose stage graph is discovered from the unified ``repro.ptg`` builder
+    and lowered to per-wavefront collective permutes), with embedding and
+    LM head applied outside the pipeline. Gradients flow back through the
+    reversed pipeline by autodiff. Numerically identical to the sequential
+    ``lm_loss`` step: same bodies, same microbatch re-assembly order.
+    """
+    from repro.dist.ctx import suspend_annotations
+    from repro.dist.pipeline import pipeline_apply, split_microbatches
+    from repro.models.layers import rms_norm
+    from repro.models.transformer import _scan_segment, layer_kinds
+
+    kinds = layer_kinds(cfg)
+    if set(kinds) != {"dense"}:
+        raise ValueError(
+            f"pipeline parallelism supports the dense family for now, "
+            f"got segments {sorted(kinds)} (family {cfg.family!r})")
+    n_stages = mesh.shape[axis]
+    n_layers = kinds["dense"]
+    if n_layers % n_stages:
+        raise ValueError(
+            f"{n_layers} layers do not split into {n_stages} equal stages")
+    _, update = make_optimizer(cfg.optimizer)
+
+    def stage_fn(stage_p, x):
+        return _scan_segment(cfg, "dense", stage_p, x)[0]
+
+    def loss_fn(params, batch):
+        with suspend_annotations():   # shard_map below owns the layout
+            tokens = batch.get("tokens")
+            x = (params["embed"][tokens] if batch.get("embeds") is None
+                 else batch["embeds"])
+            x = x.astype(jnp.dtype(cfg.compute_dtype))
+            stage_params = jax.tree.map(
+                lambda a: a.reshape(n_stages, n_layers // n_stages,
+                                    *a.shape[1:]),
+                params["dense"])
+            xs = split_microbatches(x, n_micro)
+            ys = pipeline_apply(stage_fn, stage_params, xs,
+                                mesh=mesh, axis=axis)
+            x = ys.reshape(x.shape)
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"])
+            logits = x @ head.astype(x.dtype)
+        labels = batch["labels"]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        params, opt_state = update(params, grads, opt_state, lr=lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
 def init_train_state(cfg: ModelConfig, key):
     from repro.models.transformer import init_params
 

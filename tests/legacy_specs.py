@@ -1,0 +1,345 @@
+"""Frozen pre-redesign hand-written PTG specs (PR-2 state), kept verbatim as
+the bit-identity reference for the declarative ``repro.ptg`` builder.
+
+These are NOT used by the library any more — ``repro.linalg`` /
+``repro.dist.pipeline`` / ``benchmarks.taskbench_scaling`` all build their
+graphs through ``repro.ptg.Graph``. ``tests/test_ptg_builder.py`` asserts
+the builder-derived graphs reproduce these specs task-for-task,
+edge-for-edge, wavefront-for-wavefront, and table-for-table.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.discovery import PTG
+from repro.core.schedule import BlockPTGSpec
+
+
+# --------------------------------------------------- GEMM 2D (block-cyclic)
+
+def legacy_gemm_2d_spec(nb: int, pr: int, pc: int, b: int, *,
+                        staged: bool = False,
+                        dtype=jnp.float32) -> BlockPTGSpec:
+    """nb×nb blocks of size b×b on a pr×pc shard grid."""
+
+    def owner(blk) -> int:
+        kind, r, c = blk
+        return (r % pr) * pc + (c % pc)
+
+    def mapping(k):
+        if k[0] == "gemm":                       # ("gemm", i, kk, j)
+            _, i, _, j = k
+            return owner(("C", i, j))
+        _, i, kk = k                             # ("sa"|"sb", row, col)
+        return owner(("A" if k[0] == "sa" else "B", i, kk))
+
+    def _step(t) -> int:
+        return t[2] if t[0] == "sa" else t[1]
+
+    def in_deps(t):
+        if t[0] == "gemm":
+            _, i, kk, j = t
+            deps = [("sa", i, kk), ("sb", kk, j)]
+            if kk > 0:
+                deps.append(("gemm", i, kk - 1, j))
+            return deps
+        if staged and _step(t) > 0:              # send chain: step k waits k-1
+            return [("sa", t[1], t[2] - 1) if t[0] == "sa"
+                    else ("sb", t[1] - 1, t[2])]
+        return []
+
+    def out_deps(t):
+        if t[0] == "gemm":
+            _, i, kk, j = t
+            return [("gemm", i, kk + 1, j)] if kk + 1 < nb else []
+        if t[0] == "sa":
+            _, i, kk = t
+            out = [("gemm", i, kk, j) for j in range(nb)]
+            if staged and kk + 1 < nb:
+                out.append(("sa", i, kk + 1))
+        else:
+            _, kk, j = t
+            out = [("gemm", i, kk, j) for i in range(nb)]
+            if staged and kk + 1 < nb:
+                out.append(("sb", kk + 1, j))
+        return out
+
+    def block_of(t):
+        if t[0] == "gemm":
+            return ("C", t[1], t[3])
+        return ("A", t[1], t[2]) if t[0] == "sa" else ("B", t[1], t[2])
+
+    def operands(t):
+        if t[0] == "gemm":
+            _, i, kk, j = t
+            return [("C", i, j), ("A", i, kk), ("B", kk, j)]
+        return [block_of(t)]                     # identity "send" body
+
+    def type_of(t):
+        return t[0]
+
+    if staged:
+        seeds = [("sa", i, 0) for i in range(nb)] + \
+                [("sb", 0, j) for j in range(nb)]
+    else:
+        seeds = [("sa", i, kk) for i in range(nb) for kk in range(nb)] + \
+                [("sb", kk, j) for kk in range(nb) for j in range(nb)]
+
+    return BlockPTGSpec(
+        ptg=PTG(in_deps, out_deps, mapping, type_of),
+        seeds=seeds, n_shards=pr * pc, block_shape=(b, b),
+        block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+
+
+# ------------------------------------------------------------ GEMM 3D (DNS)
+
+def legacy_gemm_3d_spec(nb: int, q: int, b: int, *,
+                        dtype=jnp.float32) -> BlockPTGSpec:
+    """DNS mapping on a q×q×q grid: slab l owns k in [l·nb/q, (l+1)·nb/q)."""
+    assert nb % q == 0, "nb must divide into q slabs"
+    kb = nb // q  # blocks per slab
+
+    def shard(l, r, c) -> int:
+        return l * q * q + (r % q) * q + (c % q)
+
+    def slab(kk: int) -> int:
+        return kk // kb
+
+    def owner(blk) -> int:
+        kind = blk[0]
+        if kind == "A":
+            _, i, kk = blk
+            return shard(slab(kk), i, kk)
+        if kind == "B":
+            _, kk, j = blk
+            return shard(slab(kk), kk, j)
+        if kind in ("P", "Pf"):                  # partial C per slab
+            _, i, j, l = blk
+            return shard(l, i, j)
+        _, i, j = blk                            # final C on slab 0
+        return shard(0, i, j)
+
+    def mapping(t):
+        return owner(block_of(t))
+
+    def block_of(t):
+        tt = t[0]
+        if tt == "gemm":
+            _, i, kk, j = t
+            return ("P", i, j, slab(kk))
+        if tt == "sa":
+            return ("A", t[1], t[2])
+        if tt == "sb":
+            return ("B", t[1], t[2])
+        if tt == "fin":                          # ("fin", i, j, l)
+            return ("Pf", t[1], t[2], t[3])
+        return ("C", t[1], t[2])                 # ("red", i, j, l)
+
+    def operands(t):
+        tt = t[0]
+        if tt == "gemm":
+            _, i, kk, j = t
+            return [("P", i, j, slab(kk)), ("A", i, kk), ("B", kk, j)]
+        if tt in ("sa", "sb"):
+            return [block_of(t)]
+        if tt == "fin":
+            return [("P", t[1], t[2], t[3])]
+        _, i, j, l = t                           # red: C += Pf_l
+        return [("C", i, j), ("Pf", i, j, l)]
+
+    def in_deps(t):
+        tt = t[0]
+        if tt == "gemm":
+            _, i, kk, j = t
+            deps = [("sa", i, kk), ("sb", kk, j)]
+            if kk % kb > 0:
+                deps.append(("gemm", i, kk - 1, j))
+            return deps
+        if tt in ("sa", "sb"):
+            return []
+        if tt == "fin":
+            _, i, j, l = t
+            return [("gemm", i, (l + 1) * kb - 1, j)]
+        _, i, j, l = t                           # red
+        deps = [("fin", i, j, l)]
+        if l > 0:
+            deps.append(("red", i, j, l - 1))
+        return deps
+
+    def out_deps(t):
+        tt = t[0]
+        if tt == "gemm":
+            _, i, kk, j = t
+            if kk % kb + 1 < kb:
+                return [("gemm", i, kk + 1, j)]
+            return [("fin", i, j, slab(kk))]
+        if tt == "sa":
+            _, i, kk = t
+            return [("gemm", i, kk, j) for j in range(nb)]
+        if tt == "sb":
+            _, kk, j = t
+            return [("gemm", i, kk, j) for i in range(nb)]
+        if tt == "fin":
+            _, i, j, l = t
+            return [("red", i, j, l)]
+        _, i, j, l = t                           # red
+        return [("red", i, j, l + 1)] if l + 1 < q else []
+
+    def type_of(t):
+        return t[0]
+
+    seeds = [("sa", i, kk) for i in range(nb) for kk in range(nb)] + \
+            [("sb", kk, j) for kk in range(nb) for j in range(nb)]
+    return BlockPTGSpec(
+        ptg=PTG(in_deps, out_deps, mapping, type_of),
+        seeds=seeds, n_shards=q ** 3, block_shape=(b, b),
+        block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+
+
+# ----------------------------------------------------------------- Cholesky
+
+def legacy_cholesky_spec(nb: int, pr: int, pc: int, b: int,
+                         dtype=jnp.float32) -> BlockPTGSpec:
+    def owner(blk) -> int:
+        _, i, j = blk
+        return (i % pr) * pc + (j % pc)
+
+    def block_of(t):
+        tt = t[0]
+        if tt == "potrf":                        # ("potrf", k)
+            return ("L", t[1], t[1])
+        if tt == "trsm":                         # ("trsm", i, k)
+            return ("L", t[1], t[2])
+        if tt == "syrk":                         # ("syrk", k, i)
+            return ("A", t[2], t[2])
+        _, k, i, j = t                           # ("gemm", k, i, j)
+        return ("A", i, j)
+
+    def mapping(t):
+        return owner(block_of(t))
+
+    def operands(t):
+        tt = t[0]
+        if tt == "potrf":
+            k = t[1]
+            return [("A", k, k)]
+        if tt == "trsm":
+            _, i, k = t
+            return [("A", i, k), ("L", k, k)]
+        if tt == "syrk":
+            _, k, i = t
+            return [("A", i, i), ("L", i, k)]
+        _, k, i, j = t
+        return [("A", i, j), ("L", i, k), ("L", j, k)]
+
+    def in_deps(t):
+        tt = t[0]
+        if tt == "potrf":
+            k = t[1]
+            return [] if k == 0 else [("syrk", k - 1, k)]
+        if tt == "trsm":
+            _, i, k = t
+            deps = [("potrf", k)]
+            if k > 0:
+                deps.append(("gemm", k - 1, i, k))
+            return deps
+        if tt == "syrk":
+            _, k, i = t
+            deps = [("trsm", i, k)]
+            if k > 0:
+                deps.append(("syrk", k - 1, i))
+            return deps
+        _, k, i, j = t
+        deps = [("trsm", i, k), ("trsm", j, k)]
+        if k > 0:
+            deps.append(("gemm", k - 1, i, j))
+        return deps
+
+    def out_deps(t):
+        tt = t[0]
+        out = []
+        if tt == "potrf":
+            k = t[1]
+            out = [("trsm", i, k) for i in range(k + 1, nb)]
+        elif tt == "trsm":
+            _, i, k = t
+            out.append(("syrk", k, i))
+            out.extend(("gemm", k, i, j) for j in range(k + 1, i))
+            out.extend(("gemm", k, i2, i) for i2 in range(i + 1, nb))
+        elif tt == "syrk":
+            _, k, i = t
+            out.append(("potrf", i) if i == k + 1 else ("syrk", k + 1, i))
+        else:
+            _, k, i, j = t
+            out.append(("trsm", i, j) if j == k + 1 else ("gemm", k + 1, i, j))
+        return out
+
+    def type_of(t):
+        return t[0]
+
+    return BlockPTGSpec(
+        ptg=PTG(in_deps, out_deps, mapping, type_of),
+        seeds=[("potrf", 0)], n_shards=pr * pc, block_shape=(b, b),
+        block_of=block_of, operands=operands, owner=owner, dtype=dtype)
+
+
+# --------------------------------------------------------------- Task Bench
+
+def legacy_taskbench_spec(pattern: str, width: int, depth: int,
+                          n_shards: int, b: int = 8, *, fan: int = 3,
+                          seed: int = 0,
+                          dtype=jnp.float32) -> Tuple[BlockPTGSpec, Dict]:
+    from benchmarks.taskbench_scaling import pattern_parents
+
+    deps: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    children: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+    for l in range(1, depth):
+        for i in range(width):
+            ps = [(l - 1, j)
+                  for j in pattern_parents(pattern, l, i, width,
+                                           fan=fan, seed=seed)]
+            deps[(l, i)] = ps
+            for p in ps:
+                children.setdefault(p, []).append((l, i))
+
+    def mapping(t):
+        return t[1] * n_shards // width
+
+    def block_of(t):
+        return t
+
+    def operands(t):
+        return [t] + deps.get(t, [])
+
+    ptg = PTG(
+        in_deps=lambda t: deps.get(t, []),
+        out_deps=lambda t: children.get(t, []),
+        mapping=mapping,
+        type_of=lambda t: f"f{len(deps.get(t, []))}")
+    spec = BlockPTGSpec(
+        ptg=ptg, seeds=[(0, i) for i in range(width)], n_shards=n_shards,
+        block_shape=(b, b), block_of=block_of, operands=operands,
+        owner=mapping, dtype=dtype)
+    return spec, deps
+
+
+# ----------------------------------------------------------------- pipeline
+
+def legacy_pipeline_ptg(n_stages: int, n_micro: int) -> PTG:
+    """The pipeline's parametrized task graph; task keys are (stage, micro)."""
+
+    def in_deps(k):
+        s, m = k
+        return ([(s - 1, m)] if s > 0 else []) + ([(s, m - 1)] if m > 0 else [])
+
+    def out_deps(k):
+        s, m = k
+        return ([(s + 1, m)] if s + 1 < n_stages else []) \
+            + ([(s, m + 1)] if m + 1 < n_micro else [])
+
+    return PTG(in_deps=in_deps, out_deps=out_deps, mapping=lambda k: k[0],
+               type_of=lambda k: "stage")

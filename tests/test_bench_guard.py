@@ -1,0 +1,80 @@
+"""Unit tests for the CI bench-regression guard (wire-efficiency trend)."""
+
+import json
+import subprocess
+import sys
+
+from benchmarks.check_regression import find_regressions, metric_rows
+
+
+def _rows(**eff):
+    return [{"name": n, "us_per_call": 1.0, "wire_efficiency": v}
+            for n, v in eff.items()]
+
+
+def test_metric_rows_skips_non_numeric():
+    rows = _rows(a=0.5) + [{"name": "b", "us_per_call": 2.0},
+                           {"name": "c", "wire_efficiency": None},
+                           {"name": "d", "wire_efficiency": True}]
+    assert metric_rows(rows, "wire_efficiency") == {"a": 0.5}
+
+
+def test_within_tolerance_passes():
+    base = _rows(x=1.0, y=0.5)
+    new = _rows(x=0.85, y=0.41)          # -15%, -18%: inside 20%
+    checked, reg = find_regressions(new, base)
+    assert checked == 2 and reg == []
+
+
+def test_regression_detected_and_named():
+    base = _rows(x=1.0, y=0.5)
+    new = _rows(x=0.79, y=0.5)           # x drops 21%
+    checked, reg = find_regressions(new, base)
+    assert checked == 2
+    assert reg == [("x", 1.0, 0.79)]
+
+
+def test_new_cases_and_missing_metric_pass_through():
+    base = _rows(x=1.0)
+    new = _rows(x=1.0, brand_new=0.01) + [{"name": "timing", "us_per_call": 9}]
+    checked, reg = find_regressions(new, base)
+    assert checked == 1 and reg == []
+
+
+def test_improvements_never_fail():
+    checked, reg = find_regressions(_rows(x=0.9), _rows(x=0.1))
+    assert checked == 1 and reg == []
+
+
+def test_cli_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    base.write_text(json.dumps({"rows": _rows(x=1.0)}))
+
+    new.write_text(json.dumps({"rows": _rows(x=0.95)}))
+    ok = subprocess.run(
+        [sys.executable, "benchmarks/check_regression.py", str(new),
+         "--baseline", str(base)], capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+
+    new.write_text(json.dumps({"rows": _rows(x=0.5)}))
+    bad = subprocess.run(
+        [sys.executable, "benchmarks/check_regression.py", str(new),
+         "--baseline", str(base)], capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "REGRESSION x" in bad.stdout
+
+    # a missing baseline must not fail the job (first run on a branch)
+    gone = subprocess.run(
+        [sys.executable, "benchmarks/check_regression.py", str(new),
+         "--baseline", str(tmp_path / "nope.json")],
+        capture_output=True, text=True)
+    assert gone.returncode == 0
+
+    # ...but zero metric overlap disarms the guard and must fail loudly
+    new.write_text(json.dumps({"rows": [{"name": "t", "us_per_call": 1.0}]}))
+    empty = subprocess.run(
+        [sys.executable, "benchmarks/check_regression.py", str(new),
+         "--baseline", str(base)], capture_output=True, text=True)
+    assert empty.returncode == 1
+    assert "no-op" in empty.stdout

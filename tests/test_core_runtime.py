@@ -300,3 +300,20 @@ def test_stf_infers_raw_war_waw():
     assert log.index("r1") < log.index("w2")
     assert log.index("r2") < log.index("w2")
     assert log.index("w2") < log.index("rw")
+
+
+def test_stf_execute_is_one_shot():
+    """A second execute() must raise loudly: the first run consumed the
+    indegree counters, so silently re-running would release the whole DAG
+    at once, ignoring every dependency."""
+    tp = Threadpool(2)
+    g = STFGraph(tp)
+    ran = []
+    g.submit(lambda: ran.append("a"), [("x", "W")])
+    g.submit(lambda: ran.append("b"), [("x", "R")])
+    g.execute()
+    tp.join()
+    assert ran == ["a", "b"]
+    with pytest.raises(RuntimeError, match="already ran"):
+        g.execute()
+    assert ran == ["a", "b"]  # nothing re-ran

@@ -1,0 +1,327 @@
+"""The unified front-end's acceptance bar: builder-derived graphs are
+bit-identical to the frozen pre-redesign hand-written specs.
+
+For every app family (GEMM 2D eager/staged, GEMM 3D, Cholesky, the four
+Task-Bench patterns, the pipeline stage graph) the declaratively-built
+graph must reproduce the legacy spec *exactly*: same seeds, same wavefront
+task lists per shard, same fused message plan, same slot maps, and the same
+lowered index/exchange tables array-for-array — so the compiled executor
+emits literally identical HLO and the host runtime fires literally
+identical active messages. Also covered: the mutual-inverse guarantee
+(``PTG.check_consistency`` catching a silently-dropped send edge), builder
+error paths, and a hypothesis sweep building random layered PTGs both ways.
+
+(Host-vs-compiled execution from one Graph runs on 8 emulated devices in
+``tests/multi_device_cases.py`` — case ``unified_graph``.)
+"""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.discovery import PTG, discover
+from repro.core.schedule import build_block_program
+from repro.dist.pipeline import _stage_perms, pipeline_graph
+from repro.linalg.cholesky import cholesky_graph, cholesky_spec
+from repro.linalg.gemm import gemm_2d_graph, gemm_2d_spec, gemm_3d_spec
+from repro.linalg.host_exec import as_numpy_bodies, run_host_ptg
+from repro.ptg import Graph, checked_ptg
+from benchmarks.taskbench_scaling import taskbench_spec
+
+from tests.legacy_specs import (legacy_cholesky_spec, legacy_gemm_2d_spec,
+                                legacy_gemm_3d_spec, legacy_pipeline_ptg,
+                                legacy_taskbench_spec)
+
+
+def assert_schedules_identical(sn, so):
+    assert [s.wavefronts for s in sn.shards] == \
+        [s.wavefronts for s in so.shards]
+    assert sn.level_of == so.level_of
+    for w in range(sn.n_wavefronts):
+        gn, go = sn.comm_plan(w), so.comm_plan(w)
+        assert list(gn) == list(go), w
+        for pair in gn:
+            assert [(m.src_task, m.dst_task) for m in gn[pair]] == \
+                   [(m.src_task, m.dst_task) for m in go[pair]], (w, pair)
+
+
+def assert_programs_identical(new_spec, old_spec):
+    """Schedule wavefronts, comm plans, slot maps, and every lowered table
+    must match array-for-array — the executors then emit identical HLO."""
+    assert list(new_spec.seeds) == list(old_spec.seeds)
+    pn = build_block_program(new_spec, validate=True)
+    po = build_block_program(old_spec, validate=True)
+    assert_schedules_identical(pn.schedule, po.schedule)
+    assert pn.slot_of == po.slot_of
+    assert pn.halo_slot == po.halo_slot
+    assert pn.n_slots == po.n_slots
+    assert pn.types == po.types and pn.arity == po.arity
+    for w in range(len(pn.tables)):
+        assert set(pn.tables[w]) == set(po.tables[w]), w
+        for t in pn.tables[w]:
+            for a, b in zip(pn.tables[w][t], po.tables[w][t]):
+                np.testing.assert_array_equal(a, b, err_msg=f"{w}/{t}")
+        for a, b in zip(pn.exchange[w], po.exchange[w]):
+            np.testing.assert_array_equal(a, b, err_msg=f"exchange {w}")
+        assert pn.patterns[w].pair_counts == po.patterns[w].pair_counts
+        assert len(pn.sparse_exchange[w]) == len(po.sparse_exchange[w])
+        for rn, ro in zip(pn.sparse_exchange[w], po.sparse_exchange[w]):
+            assert rn.perm == ro.perm
+            np.testing.assert_array_equal(rn.send, ro.send)
+            np.testing.assert_array_equal(rn.recv, ro.recv)
+    for comm in ("dense", "sparse", "auto"):
+        assert pn.comm_stats(comm=comm) == po.comm_stats(comm=comm)
+    return pn, po
+
+
+# ----------------------------------------------------- app-family identity
+
+def test_gemm_2d_eager_matches_legacy():
+    assert_programs_identical(legacy_gemm_2d_spec(5, 2, 2, 4),
+                              gemm_2d_spec(5, 2, 2, 4))
+
+
+def test_gemm_2d_staged_matches_legacy():
+    assert_programs_identical(
+        legacy_gemm_2d_spec(5, 2, 2, 4, staged=True),
+        gemm_2d_spec(5, 2, 2, 4, staged=True))
+
+
+def test_gemm_3d_matches_legacy():
+    assert_programs_identical(legacy_gemm_3d_spec(4, 2, 4),
+                              gemm_3d_spec(4, 2, 4))
+
+
+def test_cholesky_matches_legacy():
+    assert_programs_identical(legacy_cholesky_spec(6, 2, 2, 4),
+                              cholesky_spec(6, 2, 2, 4))
+
+
+@pytest.mark.parametrize("pattern", ["stencil", "fft", "tree", "random"])
+def test_taskbench_matches_legacy(pattern):
+    new_spec, new_deps = taskbench_spec(pattern, 8, 6, 4, 4, fan=2)
+    old_spec, old_deps = legacy_taskbench_spec(pattern, 8, 6, 4, 4, fan=2)
+    assert new_deps == old_deps
+    assert_programs_identical(new_spec, old_spec)
+
+
+def test_pipeline_stage_graph_matches_legacy():
+    for n_stages, n_micro in ((4, 6), (2, 8), (3, 3)):
+        g = pipeline_graph(n_stages, n_micro)
+        assert g.seeds == [(0, 0)]
+        sn = g.to_schedule(validate=True)
+        so = discover(legacy_pipeline_ptg(n_stages, n_micro), [(0, 0)],
+                      n_stages)
+        assert_schedules_identical(sn, so)
+        assert _stage_perms(sn) == _stage_perms(so)
+        assert sn.n_wavefronts == n_stages + n_micro - 1
+
+
+# ------------------------------------------------ derived-edge guarantees
+
+def test_builder_edges_are_mutual_inverses_by_construction():
+    g = cholesky_graph(5, 2, 2, 4).build()
+    ptg = g.to_ptg()
+    assert ptg.check_consistency(g.tasks) > 0
+    # indegree/in_deps agree and seeds are exactly the zero-indegree tasks
+    for k in g.tasks:
+        assert g.indegree(k) == len(g.in_deps(k))
+    assert g.seeds == [k for k in g.tasks if g.indegree(k) == 0]
+
+
+def test_check_consistency_catches_dropped_send_edge():
+    """The silent-message-drop hazard: out_deps forgets one edge in_deps
+    declares — the producer would never send the payload. The schedule-level
+    validate() cannot see this (the task never becomes ready, or discovery
+    stalls); check_consistency names the exact broken edge."""
+    spec = legacy_cholesky_spec(4, 2, 2, 4)
+    victim = ("trsm", 2, 0)
+
+    def broken_out(t):
+        return [d for d in spec.ptg.out_deps(t) if d != victim]
+
+    broken = PTG(spec.ptg.in_deps, broken_out, spec.ptg.mapping,
+                 spec.ptg.type_of)
+    with pytest.raises(ValueError, match="silently dropped"):
+        broken.check_consistency([victim])
+    with pytest.raises(ValueError):
+        discover(broken, spec.seeds, spec.n_shards, validate=True)
+
+
+def test_check_consistency_catches_spurious_out_edge():
+    ptg = PTG(in_deps=lambda k: [],
+              out_deps=lambda k: [k + 1] if k < 2 else [],
+              mapping=lambda k: 0)
+    with pytest.raises(ValueError, match="over-decrement"):
+        ptg.check_consistency([0, 1, 2])
+
+
+def test_check_consistency_catches_unstable_mapping():
+    state = {"n": 0}
+
+    def jumpy_mapping(k):
+        state["n"] += 1
+        return state["n"]
+
+    ptg = PTG(in_deps=lambda k: [], out_deps=lambda k: [],
+              mapping=jumpy_mapping)
+    with pytest.raises(ValueError, match="unstable"):
+        ptg.check_consistency([0])
+
+
+def test_checked_ptg_validates_samples():
+    ok = checked_ptg(
+        in_deps=lambda k: [k - 1] if k > 0 else [],
+        out_deps=lambda k: [k + 1] if k < 9 else [],
+        mapping=lambda k: k % 2,
+        sample_keys=range(10))
+    assert ok.in_deps(3) == [2]
+    with pytest.raises(ValueError):
+        checked_ptg(
+            in_deps=lambda k: [k - 1] if k > 0 else [],
+            out_deps=lambda k: [],          # inverse rule forgotten
+            mapping=lambda k: 0,
+            sample_keys=range(3))
+
+
+# -------------------------------------------------- builder error surface
+
+def _tiny_graph():
+    g = Graph("tiny", n_shards=1, owner=lambda blk: 0)
+    g.task_type("t", space=lambda: ((i,) for i in range(3)),
+                writes=lambda i: ("x", i),
+                reads=lambda i: [("x", i - 1)] if i else [])
+    return g
+
+
+def test_builder_rejects_forward_after_edges():
+    g = Graph("fwd", n_shards=1, owner=lambda blk: 0)
+    g.task_type("t", space=lambda: ((i,) for i in range(3)),
+                writes=lambda i: ("x", i),
+                after=lambda i: [("t", i + 1)] if i == 0 else [])
+    with pytest.raises(ValueError, match="earlier task"):
+        g.build()
+
+
+def test_builder_rejects_duplicate_keys_and_types():
+    g = Graph("dup", n_shards=1, owner=lambda blk: 0)
+    g.task_type("t", space=lambda: ((0,), (0,)),
+                writes=lambda i: ("x", i))
+    with pytest.raises(ValueError, match="duplicate task key"):
+        g.build()
+    g2 = Graph("dup2", n_shards=1, owner=lambda blk: 0)
+    g2.task_type("t", writes=lambda i: ("x", i))
+    with pytest.raises(ValueError, match="already registered"):
+        g2.task_type("t", writes=lambda i: ("y", i))
+
+
+def test_builder_requires_enumeration():
+    g = Graph("nospace", n_shards=1, owner=lambda blk: 0)
+    g.task_type("t", writes=lambda i: ("x", i))
+    with pytest.raises(ValueError, match="index space"):
+        g.build()
+
+
+def test_built_graph_is_frozen_and_queryable():
+    g = _tiny_graph().build()
+    assert g.n_tasks == 3 and g.seeds == [("t", 0)]
+    assert g.out_deps(("t", 0)) == [("t", 1)]
+    assert g.operands(("t", 2)) == [("x", 1)]
+    assert g.block_of(("t", 1)) == ("x", 1)
+    assert g.type_of(("t", 1)) == "t" and g.mapping(("t", 1)) == 0
+    with pytest.raises(KeyError, match="unknown task"):
+        g.in_deps(("t", 99))
+    with pytest.raises(RuntimeError, match="already built"):
+        g.task_type("u", writes=lambda i: ("y", i))
+    with pytest.raises(RuntimeError, match="already built"):
+        g.sequence(lambda: [])
+
+
+# ------------------------------------------- property sweep (random PTGs)
+
+def _layered_graph_two_ways(rng, n_layers, width, n_shards, fan_in):
+    """The same random layered PTG built (a) by hand like
+    tests/test_schedule_property.random_layered_ptg and (b) through the
+    declarative builder; returns both specs + blocks + oracle."""
+    from tests.test_schedule_property import random_layered_ptg
+
+    spec, bodies, blocks, oracle = random_layered_ptg(
+        rng, n_layers, width, n_shards, fan_in)
+
+    # reconstruct the identical deps dict from the hand spec
+    deps = {(l, i): list(spec.ptg.in_deps((l, i)))
+            for l in range(1, n_layers) for i in range(width)}
+
+    def owner(blk):
+        return (blk[1] * 7 + blk[0]) % n_shards
+
+    g = Graph("layered", n_shards=n_shards, owner=owner, block_shape=(4, 4))
+    for nfan in sorted({len(d) for d in deps.values()} | {0}):
+        g.task_type(f"f{nfan}",
+                    key=lambda l, i: (l, i),
+                    writes=lambda l, i: (l, i),
+                    reads=lambda l, i: [(l, i)] + deps.get((l, i), []))
+    g.sequence(lambda: ((f"f{len(deps.get((l, i), ()))}", l, i)
+                        for l in range(n_layers) for i in range(width)))
+    return g, spec, bodies, blocks, oracle
+
+
+@settings(deadline=None, max_examples=10,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n_layers=st.integers(2, 5),
+    width=st.integers(1, 5),
+    n_shards=st.integers(1, 4),
+    fan_in=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_random_layered_builder_matches_hand_spec(n_layers, width, n_shards,
+                                                  fan_in, seed):
+    rng = np.random.default_rng(seed)
+    g, hand_spec, bodies, blocks, oracle = _layered_graph_two_ways(
+        rng, n_layers, width, n_shards, fan_in)
+    new_spec = g.to_block_spec()
+
+    # identical schedules + lowered tables, except task ORDER within a
+    # wavefront may differ (the hand spec's out_deps enumerates dict order);
+    # compare the invariant structure instead
+    pn = build_block_program(new_spec, validate=True)
+    po = build_block_program(hand_spec, validate=True)
+    assert pn.schedule.level_of == po.schedule.level_of
+    assert pn.slot_of.keys() == po.slot_of.keys()
+    for w in range(pn.schedule.n_wavefronts):
+        assert pn.patterns[w].pair_counts == po.patterns[w].pair_counts
+        for s in range(n_shards):
+            assert sorted(map(repr, pn.schedule.shards[s].wavefronts[w])) \
+                == sorted(map(repr, po.schedule.shards[s].wavefronts[w]))
+
+    # and host execution of the builder graph matches the oracle
+    np_bodies = {t: (lambda fn: lambda *a: np.asarray(fn(*a)))(fn)
+                 for t, fn in bodies.items()}
+    out = run_host_ptg(new_spec, blocks, np_bodies, n_threads=2,
+                       timeout=60.0)
+    want = oracle()
+    for blk, arr in want.items():
+        np.testing.assert_allclose(out[blk], arr, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------- one graph, two specs
+
+def test_graph_lowers_to_consistent_spec_and_host_run():
+    """One small Graph: to_block_spec feeds both build_block_program and
+    run_host_ptg, and both see the same derived structure (the single-
+    device slice of the one-definition-two-backends claim; the multi-device
+    executor half runs in multi_device_cases.case_unified_graph)."""
+    g = gemm_2d_graph(3, 2, 1, 4)
+    spec = g.to_block_spec()
+    prog = build_block_program(spec, validate=True)
+    total = sum(len(wf) for s in prog.schedule.shards for wf in s.wavefronts)
+    assert total == g.n_tasks == 3 * 3 * 3 + 2 * 3 * 3
+
+    from repro.linalg.gemm import assemble, gemm_bodies, make_blocks
+    blocks = make_blocks(None, 3, 4)
+    out = g.run_host(blocks, as_numpy_bodies(gemm_bodies()))
+    a = assemble(blocks, "A", 3, 4)
+    bm = assemble(blocks, "B", 3, 4)
+    np.testing.assert_allclose(assemble(out, "C", 3, 4), a @ bm,
+                               rtol=2e-4, atol=2e-4)
