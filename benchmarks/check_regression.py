@@ -1,16 +1,25 @@
-"""Bench-regression guard: fail CI when wire efficiency regresses.
+"""Bench-regression guard: fail CI when a tracked bench metric regresses.
 
 Compares a freshly produced ``BENCH_*.json`` (benchmarks/run.py --json)
 against the committed baseline artifact, case by case (rows matched by
-``name``), on a ratio metric — default ``wire_efficiency``, the tracked
-trajectory of ROADMAP §Perf iteration log. A case that drops more than
-``--tol`` (default 20%) below its baseline fails the job; new cases (no
-baseline row) and timing rows (no metric) pass through. us-per-task is
-deliberately NOT guarded: it is noisy on emulated-CPU CI, while wire
-efficiency is a deterministic property of the comm-plan lowering.
+``name``), on ratio metrics. Each ``--metric`` may carry a direction
+suffix: ``name`` / ``name:higher`` guards a higher-is-better metric
+(regression = drop below ``base * (1 - tol)``), ``name:lower`` a
+lower-is-better one (regression = rise above ``base * (1 + tol)``).
+
+Defaults guard ``wire_efficiency`` — the tracked trajectory of ROADMAP
+§Perf iteration log; CI additionally passes ``hlo_frac:lower`` (segmented
+/ unrolled StableHLO bytes of the deep Task-Bench rows) so the
+segmented-scan executor's compile-size win cannot silently erode. A case
+that moves more than ``--tol`` (default 20%) past its baseline fails the
+job; new cases (no baseline row) and timing rows (no metric) pass
+through. us-per-task and compile_seconds are deliberately NOT guarded:
+they are noisy on emulated-CPU CI, while wire efficiency and HLO-size
+ratios are deterministic properties of the lowering.
 
     python benchmarks/check_regression.py BENCH_ci.json \
-        --baseline BENCH_20260727.json [--metric wire_efficiency] [--tol 0.2]
+        --baseline BENCH_20260727.json \
+        [--metric wire_efficiency] [--metric hlo_frac:lower] [--tol 0.2]
 """
 
 from __future__ import annotations
@@ -31,11 +40,24 @@ def metric_rows(rows: Sequence[dict], metric: str) -> Dict[str, float]:
     return out
 
 
+def parse_metric(spec: str) -> Tuple[str, bool]:
+    """``"name[:higher|:lower]"`` -> (name, lower_is_better)."""
+    name, _, direction = spec.partition(":")
+    if direction not in ("", "higher", "lower"):
+        raise ValueError(f"bad metric direction {spec!r} "
+                         "(use name, name:higher, or name:lower)")
+    return name, direction == "lower"
+
+
 def find_regressions(new_rows: Sequence[dict], base_rows: Sequence[dict], *,
                      metric: str = "wire_efficiency",
-                     tol: float = 0.2) -> Tuple[int, List[Tuple[str, float, float]]]:
-    """Compare per-case metric values; a case regresses when
-    ``new < base * (1 - tol)``. Returns (cases compared, regressions as
+                     tol: float = 0.2,
+                     lower_is_better: bool = False,
+                     ) -> Tuple[int, List[Tuple[str, float, float]]]:
+    """Compare per-case metric values; a case regresses when it moves more
+    than ``tol`` past baseline in the bad direction — ``new < base * (1 -
+    tol)`` for higher-is-better metrics, ``new > base * (1 + tol)`` for
+    lower-is-better ones. Returns (cases compared, regressions as
     (name, baseline, new))."""
     base = metric_rows(base_rows, metric)
     new = metric_rows(new_rows, metric)
@@ -45,7 +67,11 @@ def find_regressions(new_rows: Sequence[dict], base_rows: Sequence[dict], *,
         if name not in base:
             continue
         checked += 1
-        if v < base[name] * (1.0 - tol):
+        if lower_is_better:
+            bad = v > base[name] * (1.0 + tol)
+        else:
+            bad = v < base[name] * (1.0 - tol)
+        if bad:
             regressions.append((name, base[name], v))
     return checked, regressions
 
@@ -55,10 +81,17 @@ def main(argv=None) -> int:
     ap.add_argument("new", help="freshly produced BENCH json")
     ap.add_argument("--baseline", required=True,
                     help="committed baseline BENCH json")
-    ap.add_argument("--metric", default="wire_efficiency")
+    ap.add_argument("--metric", action="append", default=None,
+                    help="metric to guard, optionally ':higher' (default) "
+                         "or ':lower'; repeatable")
     ap.add_argument("--tol", type=float, default=0.2,
-                    help="allowed fractional drop vs baseline (default 0.2)")
+                    help="allowed fractional move vs baseline (default 0.2)")
     args = ap.parse_args(argv)
+    try:
+        metrics = [parse_metric(m)
+                   for m in (args.metric or ["wire_efficiency"])]
+    except ValueError as e:
+        ap.error(str(e))
 
     try:
         with open(args.baseline) as f:
@@ -69,22 +102,36 @@ def main(argv=None) -> int:
     with open(args.new) as f:
         new_rows = json.load(f)["rows"]
 
-    checked, regressions = find_regressions(
-        new_rows, base_rows, metric=args.metric, tol=args.tol)
-    print(f"{checked} case(s) compared on {args.metric} "
-          f"(tol {args.tol:.0%})")
-    if not checked:
-        # zero overlap means the metric silently vanished from the rows (or
-        # the baseline is stale) — that disarms the guard, so fail loudly
-        # rather than stay green while the tracked trajectory disappears
-        print(f"FAIL: no overlapping cases carry a numeric {args.metric}; "
-              "the guard would be a no-op. Refresh the committed baseline "
-              "or restore the metric field.", flush=True)
-        return 1
-    for name, b, v in regressions:
-        print(f"REGRESSION {name}: {args.metric} {b:.4f} -> {v:.4f} "
-              f"({v / b - 1.0:+.1%})", flush=True)
-    return 1 if regressions else 0
+    failed = False
+    for metric, lower in metrics:
+        checked, regressions = find_regressions(
+            new_rows, base_rows, metric=metric, tol=args.tol,
+            lower_is_better=lower)
+        print(f"{checked} case(s) compared on {metric} "
+              f"({'lower' if lower else 'higher'} is better, "
+              f"tol {args.tol:.0%})")
+        # baseline cases this run did not produce are unguarded (normal
+        # when CI runs a module subset; suspicious when a row was renamed
+        # or a metric field dropped) — say so instead of skipping silently
+        gone = sorted(set(metric_rows(base_rows, metric))
+                      - set(metric_rows(new_rows, metric)))
+        if gone:
+            print(f"note: {len(gone)} baseline case(s) not in this run "
+                  f"(unguarded on {metric}), e.g. {gone[:3]}")
+        if not checked:
+            # zero overlap means the metric silently vanished from the rows
+            # (or the baseline is stale) — that disarms the guard, so fail
+            # loudly rather than stay green while the trajectory disappears
+            print(f"FAIL: no overlapping cases carry a numeric {metric}; "
+                  "the guard would be a no-op. Refresh the committed "
+                  "baseline or restore the metric field.", flush=True)
+            failed = True
+            continue
+        for name, b, v in regressions:
+            print(f"REGRESSION {name}: {metric} {b:.4f} -> {v:.4f} "
+                  f"({v / b - 1.0:+.1%})", flush=True)
+        failed = failed or bool(regressions)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

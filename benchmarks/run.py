@@ -11,8 +11,9 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
 
 ``--json [PATH]`` additionally writes a ``BENCH_<utc>.json`` artifact with
 every row (plus each module's structured ``extra`` payload), so
-us-per-task and wire-efficiency become a tracked trajectory across PRs —
-see ROADMAP §Perf iteration log.
+us-per-task, wire-efficiency, and — since the segmented-scan executor —
+``compile_seconds`` / ``hlo_bytes`` become a tracked trajectory across
+PRs — see ROADMAP §Perf iteration log.
 """
 
 from __future__ import annotations
@@ -24,6 +25,33 @@ import platform
 import sys
 import time
 import traceback
+
+
+def compile_metrics(fn, *args):
+    """Lower and compile a jittable callable, measuring the compile-cost
+    columns the BENCH rows track: ``lower_seconds`` (trace + StableHLO
+    emission), ``compile_seconds`` (XLA), and ``hlo_bytes`` (StableHLO
+    module text size — the depth-proportional quantity the segmented-scan
+    lowering exists to bound). Returns ``(compiled_callable, metrics)``.
+
+    ``hlo_bytes`` is deterministic for a given jax version, so ratios of it
+    between two lowerings of the same program (``hlo_frac`` in the deep
+    Task-Bench rows) are guard-stable across machines.
+    """
+    import jax
+
+    t0 = time.perf_counter()
+    lowered = jax.jit(fn).lower(*args)
+    lower_s = time.perf_counter() - t0
+    hlo_bytes = len(lowered.as_text())
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t0
+    return compiled, {
+        "lower_seconds": round(lower_s, 4),
+        "compile_seconds": round(compile_s, 4),
+        "hlo_bytes": hlo_bytes,
+    }
 
 # `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
 # sys.path; fix it up so the `benchmarks.*` imports resolve either way.

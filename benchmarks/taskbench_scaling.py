@@ -16,7 +16,16 @@ Reported per (pattern, n_shards):
 - host_us_per_task:  the faithful async host runtime executing the PTG;
 - exec_us_per_task:  the compiled SPMD executor (when enough devices);
 - wire_efficiency:   real / (real + padded) bytes under the chosen
-  lowering, vs the dense all_to_all baseline — the tracked trajectory.
+  lowering, vs the dense all_to_all baseline — the tracked trajectory;
+- compile_seconds / hlo_bytes: compile cost of the chosen lowering
+  (``benchmarks.run.compile_metrics``).
+
+The ``taskbench_deep/*`` rows run the ROADMAP segmented-scan acceptance
+scenario (width 16, depth 48, 8 shards — depth past any sane unroll cap):
+segmented scan vs unrolled ``comm="auto"`` vs pure dense scan, reporting
+each lowering's wire efficiency plus ``hlo_frac`` = segmented hlo_bytes /
+unrolled hlo_bytes (guarded lower-is-better by ``check_regression.py``),
+and the ``plan_lowering`` decision for every pattern.
 """
 
 from __future__ import annotations
@@ -153,14 +162,17 @@ def run(report) -> None:
             host_us = (time.perf_counter() - t0) / n_tasks * 1e6
 
             exec_us = None
+            cmetrics = {}
             if len(jax.devices()) >= n_shards:
+                from benchmarks.run import compile_metrics
+
                 mesh = jax.sharding.Mesh(
                     np.array(jax.devices()[:n_shards]), ("shards",))
                 packed = jnp.asarray(prog.pack(blocks))
                 with mesh:
-                    step = jax.jit(prog.auto_executor(taskbench_bodies(),
-                                                      mesh))
-                    step(packed).block_until_ready()      # compile
+                    step, cmetrics = compile_metrics(
+                        prog.auto_executor(taskbench_bodies(), mesh), packed)
+                    step(packed).block_until_ready()      # warm up
                     reps = 5
                     t0 = time.perf_counter()
                     for _ in range(reps):
@@ -184,5 +196,103 @@ def run(report) -> None:
                     "us_per_task_build": build_us,
                     "us_per_task_host": host_us,
                     "us_per_task_exec": exec_us,
+                    **cmetrics,
                 },
             )
+    run_deep(report)
+
+
+DEEP_WIDTH, DEEP_DEPTH, DEEP_SHARDS, DEEP_UNROLL_CAP = 16, 48, 8, 32
+
+
+def run_deep(report) -> None:
+    """Deep-schedule rows: depth past the unroll cap, where the choice used
+    to cliff to the dense scan. The stencil row compiles all three
+    lowerings and reports ``hlo_frac`` (segmented / unrolled StableHLO
+    bytes — the compile-cost win) next to each lowering's wire efficiency
+    (the padding win); the other patterns report program-level stats plus
+    the ``plan_lowering`` decision (random: genuinely dense; fft: stride
+    cycling fragments the signatures — the loud dense-scan fallback)."""
+    from benchmarks.run import compile_metrics
+
+    width, depth, n_shards, b = DEEP_WIDTH, DEEP_DEPTH, DEEP_SHARDS, 8
+    n_tasks = width * depth
+    for pattern in PATTERNS:
+        spec, _deps = taskbench_spec(pattern, width, depth, n_shards, b)
+        t0 = time.perf_counter()
+        prog = build_block_program(spec)
+        build_us = (time.perf_counter() - t0) / n_tasks * 1e6
+        plan = prog.plan_lowering(unroll_cap=DEEP_UNROLL_CAP)
+        seg = prog.comm_stats(comm="auto", segmented=True)
+        auto = prog.comm_stats(comm="auto")
+        dense = prog.comm_stats(comm="dense")
+        # What the pure dense scan *actually* ships: every scan iteration
+        # runs the all_to_all padded to the global M_max — worse than the
+        # per-wavefront dense accounting above (which models the unrolled
+        # dense lowering).
+        n = prog.spec.n_shards
+        m_max = max(e[0].shape[-1] for e in prog.exchange)
+        scan_wire = (prog.schedule.n_wavefronts * n * n * m_max
+                     * dense["block_bytes"])
+        eff_dense_scan = (dense["real_bytes"] / scan_wire if scan_wire
+                          else 1.0)
+        # the efficiency the auto policy actually ships for this pattern
+        eff_planned = (eff_dense_scan if plan["mode"] == "dense_scan"
+                       else seg["wire_efficiency"])
+        extra = {
+            "pattern": pattern, "n_shards": n_shards,
+            "width": width, "depth": depth, "n_tasks": n_tasks,
+            "plan_mode": plan["mode"], "plan_reason": plan["reason"],
+            "n_segments": seg["n_segments"],
+            "segment_density_mean": float(np.mean(
+                [s["density"] for s in seg["segments"]])),
+            "wire_efficiency": eff_planned,
+            "wire_efficiency_segmented": seg["wire_efficiency"],
+            "wire_efficiency_unrolled": auto["wire_efficiency"],
+            "wire_efficiency_dense": dense["wire_efficiency"],
+            "wire_efficiency_dense_scan": eff_dense_scan,
+            "real_bytes": seg["real_bytes"],
+            "padded_bytes": seg["padded_bytes"],
+            "us_per_task_build": build_us,
+        }
+        exec_us = None
+        if pattern == "stencil" and len(jax.devices()) >= n_shards:
+            mesh = jax.sharding.Mesh(
+                np.array(jax.devices()[:n_shards]), ("shards",))
+            blocks = taskbench_blocks(width, depth, b)
+            packed = jnp.asarray(prog.pack(blocks))
+            bodies = taskbench_bodies()
+            with mesh:
+                lowerings = {
+                    "segmented": dict(scan=True, comm="auto", overlap=True),
+                    "unrolled": dict(scan=False, comm="auto", overlap=True),
+                    "dense_scan": dict(scan=True),
+                }
+                for name, kw in lowerings.items():
+                    step, cm = compile_metrics(
+                        prog.executor(bodies, mesh, **kw), packed)
+                    extra.update({f"{k}_{name}": v for k, v in cm.items()})
+                    if name == "segmented":
+                        step(packed).block_until_ready()
+                        reps = 3
+                        t0 = time.perf_counter()
+                        for _ in range(reps):
+                            out = step(packed)
+                        out.block_until_ready()
+                        exec_us = ((time.perf_counter() - t0) / reps
+                                   / n_tasks * 1e6)
+                        extra.update(cm)   # the shipped lowering's columns
+                extra["hlo_frac"] = (extra["hlo_bytes_segmented"]
+                                     / extra["hlo_bytes_unrolled"])
+                extra["us_per_task_exec"] = exec_us
+        report(
+            f"taskbench_deep/{pattern}/s{n_shards}",
+            exec_us if exec_us is not None else build_us,
+            f"plan={plan['mode']};segs={seg['n_segments']};"
+            f"eff={eff_planned:.3f};eff_unrolled="
+            f"{auto['wire_efficiency']:.3f};"
+            f"eff_dense_scan={eff_dense_scan:.3f}"
+            + (f";hlo_frac={extra['hlo_frac']:.3f}"
+               if "hlo_frac" in extra else ""),
+            extra=extra,
+        )

@@ -30,6 +30,12 @@ except ImportError:  # pragma: no cover — exercised only on slim images
     def _booleans():
         return _Strategy(lambda rng: bool(rng.getrandbits(1)))
 
+    def _lists(elements, *, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 10
+        return _Strategy(lambda rng: [elements.draw(rng)
+                                      for _ in range(rng.randint(min_size,
+                                                                 hi))])
+
     def _given(**strategies):
         def deco(fn):
             @functools.wraps(fn)
@@ -63,6 +69,7 @@ except ImportError:  # pragma: no cover — exercised only on slim images
     st_mod.integers = _integers
     st_mod.sampled_from = _sampled_from
     st_mod.booleans = _booleans
+    st_mod.lists = _lists
 
     hyp_mod = types.ModuleType("hypothesis")
     hyp_mod.given = _given

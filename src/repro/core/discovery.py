@@ -160,6 +160,43 @@ class CommPattern:
             remaining = rest
         return out
 
+    def round_perms(self) -> Tuple[Tuple[Tuple[int, int], ...], ...]:
+        """The *static* structure of :meth:`rounds` — the per-round partial
+        permutations as a hashable tuple. A ``jax.lax.scan`` body can only
+        carry a fixed ``ppermute`` permutation, so this is exactly the part
+        of the pattern a scanned lowering must hold constant across the
+        wavefronts it folds together (per-pair widths may differ — they pad)."""
+        return tuple(tuple(r) for r in self.rounds())
+
+    def signature(self, choice: str) -> Tuple:
+        """Hashable *comm signature* of this wavefront's exchange under the
+        lowering ``choice`` ("none" | "all_to_all" | "ppermute") — the
+        segmentation key for the segmented-scan executor. Two wavefronts
+        with equal signatures can share one scan body: same collective, and
+        for ppermute the identical static round permutations (table widths
+        are made compatible by per-segment padding)."""
+        if choice == "none":
+            return ("none",)
+        if choice == "all_to_all":
+            return ("all_to_all",)
+        if choice == "ppermute":
+            return ("ppermute", self.round_perms())
+        raise ValueError(f"unknown lowering choice {choice!r}")
+
+
+def segment_runs(items: Sequence[Hashable]) -> List[Tuple[int, int]]:
+    """Partition ``[0, len(items))`` into maximal ``[start, stop)`` runs of
+    equal items. The segmentation primitive shared by the segmented-scan
+    executor (runs of equal comm signature -> one ``jax.lax.scan`` each) and
+    the pipeline lowering (runs of equal stage hand-off permutation)."""
+    runs: List[Tuple[int, int]] = []
+    for i, item in enumerate(items):
+        if runs and items[runs[-1][0]] == item:
+            runs[-1] = (runs[-1][0], i + 1)
+        else:
+            runs.append((i, i + 1))
+    return runs
+
 
 @dataclass
 class WavefrontSchedule:

@@ -22,6 +22,15 @@ halo-independent tasks run and only *landed* before its halo-dependent
 tasks, so XLA can run the collective concurrently with independent compute
 — the compiled analogue of the paper's AM/compute overlap (§I-C, Fig 9).
 
+Deep schedules get the same sparse wire without unrolled-HLO growth from
+the **segmented scan**: the wavefront sequence is partitioned into maximal
+runs of equal *comm signature* (same collective class; for ppermute, the
+identical static round permutations — ``CommPattern.signature``), each run
+becomes one ``jax.lax.scan`` padded to the run's own ``T_max``/``M_max``,
+and the runs are stitched sequentially, with ``overlap`` carrying the
+in-flight buffers across segment boundaries. ``auto_executor`` picks
+between unrolled / segmented / pure dense scan per ``plan_lowering``.
+
 Contract (checked at build time):
 - every task writes exactly one block, owned by the task's shard
   ("owner computes" — the paper's 2D GEMM mapping rule);
@@ -37,6 +46,7 @@ aliased with trash, so garbage cannot contaminate results.
 
 from __future__ import annotations
 
+import logging
 from collections import defaultdict
 from dataclasses import dataclass
 from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
@@ -52,7 +62,10 @@ try:
 except ImportError:  # pragma: no cover — older jax keeps it experimental
     from jax.experimental.shard_map import shard_map
 
-from .discovery import PTG, CommPattern, WavefrontSchedule, discover
+from .discovery import (PTG, CommPattern, WavefrontSchedule, discover,
+                        segment_runs)
+
+logger = logging.getLogger(__name__)
 
 K = Hashable
 B = Hashable  # block id
@@ -118,6 +131,12 @@ class BlockProgram:
     # sparse_exchange[w]: ppermute-round lowering of the same plan.
     sparse_exchange: List[List[SparseRound]]
 
+    def __post_init__(self):
+        # memo for host-side lowering products (stacked scan tables, segment
+        # plans, halo splits) — executors rebuild O(W·n·T) numpy tables
+        # otherwise on every construction of the same program.
+        self._cache: Dict[Tuple, object] = {}
+
     # ------------------------------------------------------------ packing
 
     @property
@@ -166,8 +185,37 @@ class BlockProgram:
             return "all_to_all"
         return "ppermute"
 
+    # ------------------------------------------------------- segmentation
+
+    def comm_signature(self, w: int, comm: str = "auto",
+                       density_threshold: float = 0.5) -> Tuple:
+        """Hashable comm signature of wavefront ``w`` under policy ``comm``
+        (see :meth:`CommPattern.signature`): the segmentation key of the
+        segmented-scan lowering. Wavefronts sharing a signature share a scan
+        body — same collective, identical static ppermute rounds."""
+        return self.patterns[w].signature(
+            self.lowered_pattern(w, comm, density_threshold))
+
+    def _segment_plan(self, comm: str, density_threshold: float
+                      ) -> Tuple[List[Tuple[int, int]], List[Tuple]]:
+        key = ("segments", comm, density_threshold)
+        if key not in self._cache:
+            sigs = [self.comm_signature(w, comm, density_threshold)
+                    for w in range(len(self.tables))]
+            self._cache[key] = (segment_runs(sigs), sigs)
+        return self._cache[key]  # type: ignore[return-value]
+
+    def segments(self, comm: str = "auto",
+                 density_threshold: float = 0.5) -> List[Tuple[int, int]]:
+        """Partition the wavefront sequence into maximal ``[start, stop)``
+        runs of equal comm signature — the segmented-scan executor emits one
+        ``jax.lax.scan`` per run, with tables padded to each run's own
+        ``T_max``/``M_max`` (never a global maximum)."""
+        return self._segment_plan(comm, density_threshold)[0]
+
     def comm_stats(self, *, comm: str = "dense",
-                   density_threshold: float = 0.5) -> dict:
+                   density_threshold: float = 0.5,
+                   segmented: bool = False) -> dict:
         """Bytes on the wire per wavefront under lowering policy ``comm``
         ("dense" | "sparse" | "auto") — feeds the roofline's collective term
         and the §Perf iteration log.
@@ -176,15 +224,56 @@ class BlockProgram:
         (src, dst) pair); ``padded_bytes`` is the *wasted* wire (trash-slot
         padding the chosen collective ships on top); ``wire_efficiency`` =
         real / (real + padded).
+
+        ``segmented=True`` accounts the segmented-scan lowering instead:
+        each wavefront ships its *segment's* padded shape (per-segment
+        ``M_max`` for all_to_all runs, per-round segment-max widths for
+        ppermute runs), and the result gains ``n_segments`` plus a
+        per-segment breakdown — what the benchmarks and the CI regression
+        guard watch for the deep-schedule rows.
         """
         b0, b1 = self.spec.block_shape
         block_bytes = b0 * b1 * np.dtype(jnp.dtype(self.spec.dtype)).itemsize
         n = self.spec.n_shards
+        seg_wire: Dict[int, int] = {}
+        seg_rows: List[dict] = []
+        if segmented:
+            runs, sigs = self._segment_plan(comm, density_threshold)
+            for (s, e) in runs:
+                sig = sigs[s]
+                if sig[0] == "all_to_all":
+                    m_seg = max(self.exchange[w][0].shape[-1]
+                                for w in range(s, e))
+                    wire_w = n * n * m_seg
+                elif sig[0] == "ppermute":
+                    widths = [max(self.sparse_exchange[w][r].width
+                                  for w in range(s, e))
+                              for r in range(len(sig[1]))]
+                    wire_w = sum(len(p) * wd
+                                 for p, wd in zip(sig[1], widths))
+                else:
+                    wire_w = 0
+                for w in range(s, e):
+                    seg_wire[w] = wire_w
+                real_seg = sum(self.patterns[w].total for w in range(s, e))
+                seg_rows.append({
+                    "start": s, "stop": e, "wavefronts": e - s,
+                    "pattern": sig[0],
+                    "rounds": (len(sig[1]) if sig[0] == "ppermute"
+                               else (1 if sig[0] == "all_to_all" else 0)),
+                    "density": float(np.mean(
+                        [self.patterns[w].density for w in range(s, e)])),
+                    "real_bytes": real_seg * block_bytes,
+                    "padded_bytes": (wire_w * (e - s) - real_seg)
+                    * block_bytes,
+                })
         per_wave = []
         for w, (send, _) in enumerate(self.exchange):
             real = self.patterns[w].total
             choice = self.lowered_pattern(w, comm, density_threshold)
-            if choice == "all_to_all":
+            if segmented:
+                wire = seg_wire[w]
+            elif choice == "all_to_all":
                 wire = n * n * send.shape[-1]
             elif choice == "ppermute":
                 wire = sum(r.wire_slots for r in self.sparse_exchange[w])
@@ -204,7 +293,7 @@ class BlockProgram:
         real_bytes = sum(w["real_blocks"] for w in per_wave) * block_bytes
         padded_bytes = sum(w["padded_blocks"] for w in per_wave) * block_bytes
         total = real_bytes + padded_bytes
-        return {
+        out = {
             "comm": comm,
             "block_bytes": block_bytes,
             "wavefronts": len(self.exchange),
@@ -214,6 +303,11 @@ class BlockProgram:
             "wire_efficiency": real_bytes / total if total else 1.0,
             "per_wavefront": per_wave,
         }
+        if segmented:
+            out["segmented"] = True
+            out["n_segments"] = len(seg_rows)
+            out["segments"] = seg_rows
+        return out
 
     # ----------------------------------------------------------- lowering
 
@@ -223,8 +317,13 @@ class BlockProgram:
         refinement of ``WavefrontSchedule.halo_split`` (control-only edges
         carry no block, so a message-level "dependent" task may still be
         slot-independent). Returns ``(tables[w], None)`` when nothing
-        arrives."""
+        arrives. Memoized: both overlap lowerings (unrolled and segmented
+        scan) share the split."""
+        key = ("split", w)
+        if key in self._cache:
+            return self._cache[key]  # type: ignore[return-value]
         if w == 0 or self.patterns[w - 1].total == 0:
+            self._cache[key] = (self.tables[w], None)
             return self.tables[w], None
         n = self.spec.n_shards
         recv_prev = self.exchange[w - 1][1]          # [dst, src, M]
@@ -254,7 +353,145 @@ class BlockProgram:
                         o_np[s, j] = ops[s, i]
                         u_np[s, j] = out[s, i]
                 tbl[t] = (o_np, u_np)
+        self._cache[key] = (indep_tbl, dep_tbl)
         return indep_tbl, dep_tbl
+
+    # ------------------------------------------ lowering: shared building
+
+    def _compute_fn(self, bodies: Dict[str, Callable[..., jnp.ndarray]]):
+        """The per-wavefront compute step shared by every lowering."""
+
+        def wavefront_compute(local, tbl):
+            # local: [n_slots, b0, b1]; tbl[t] = (ops_idx [T, ar], out_idx [T])
+            for t in self.types:
+                if t not in tbl or tbl[t][0].shape[0] == 0:
+                    continue
+                ops_idx, out_idx = tbl[t]
+                ops = local[ops_idx]                 # [T, arity, b0, b1]
+                res = jax.vmap(lambda o, _t=t: bodies[_t](*jnp.unstack(o)))(ops)
+                local = local.at[out_idx].set(res.astype(local.dtype))
+            return local
+
+        return wavefront_compute
+
+    def _stack_tables(self, tabs: Dict[str, np.ndarray], prefix: str,
+                      tbl_list: Sequence[Dict[str, Tuple[np.ndarray,
+                                                         np.ndarray]]]):
+        """Stack per-wavefront compute tables into shard-major arrays
+        ``tabs[f"{t}:{prefix}ops"] [n, L, T_max, ar]`` (padded with trash to
+        the *list's* own per-type T_max — never a global maximum)."""
+        L, n = len(tbl_list), self.spec.n_shards
+        for t in self.types:
+            T = max((tbl[t][0].shape[1] for tbl in tbl_list if t in tbl),
+                    default=0)
+            if T == 0:
+                continue
+            ops = np.full((L, n, T, self.arity[t]), self.trash, np.int32)
+            out = np.full((L, n, T), self.trash, np.int32)
+            for j, tbl in enumerate(tbl_list):
+                if t in tbl:
+                    o, u = tbl[t]
+                    ops[j, :, : o.shape[1]] = o
+                    out[j, :, : u.shape[1]] = u
+            tabs[f"{t}:{prefix}ops"] = np.swapaxes(ops, 0, 1).copy()
+            tabs[f"{t}:{prefix}out"] = np.swapaxes(out, 0, 1).copy()
+
+    def _stack_exchange(self, tabs: Dict[str, np.ndarray],
+                        ws: Sequence[int], m_pad: int):
+        """Stack the all_to_all exchange tables of wavefronts ``ws`` into
+        shard-major ``tabs["send"/"recv"] [n, L, n, m_pad]`` (trash-padded)
+        — shared by the dense scan (all wavefronts, global M_max) and the
+        segmented scan (one run, the run's own M_max)."""
+        n = self.spec.n_shards
+        send = np.full((len(ws), n, n, m_pad), self.trash, np.int32)
+        recv = np.full((len(ws), n, n, m_pad), self.trash, np.int32)
+        for j, w in enumerate(ws):
+            s_i, r_i = self.exchange[w]
+            send[j, :, :, : s_i.shape[-1]] = s_i
+            recv[j, :, :, : r_i.shape[-1]] = r_i
+        tabs["send"] = np.swapaxes(send, 0, 1).copy()
+        tabs["recv"] = np.swapaxes(recv, 0, 1).copy()
+
+    def _dense_scan_tables(self) -> Tuple[Dict[str, np.ndarray], int]:
+        """Memoized global stacking for the pure dense scan: tables padded
+        to global T_max per type, exchanges to the global M_max."""
+        key = ("dense_scan_tables",)
+        if key in self._cache:
+            return self._cache[key]  # type: ignore[return-value]
+        M_max = max((e[0].shape[-1] for e in self.exchange), default=0)
+        # Stack tables shard-major: [n_shards, W, ...]; a single P(axis)
+        # sharding then hands each shard exactly its own rows.
+        tabs_np: Dict[str, np.ndarray] = {}
+        self._stack_tables(tabs_np, "", self.tables)
+        if M_max:
+            self._stack_exchange(tabs_np, range(len(self.tables)), M_max)
+        self._cache[key] = (tabs_np, M_max)
+        return self._cache[key]  # type: ignore[return-value]
+
+    @staticmethod
+    def _ex_keys(sig: Tuple) -> Tuple[List[str], List[str]]:
+        """Exchange table keys of a segment with comm signature ``sig``."""
+        if sig[0] == "all_to_all":
+            return ["send"], ["recv"]
+        if sig[0] == "ppermute":
+            rr = range(len(sig[1]))
+            return [f"send{r}" for r in rr], [f"recv{r}" for r in rr]
+        return [], []
+
+    def _segment_tables(self, comm: str, density_threshold: float,
+                        overlap: bool) -> List[Tuple[int, int, Tuple,
+                                                     Dict[str, np.ndarray]]]:
+        """Memoized per-segment stacked tables for the segmented-scan
+        lowering: ``[(start, stop, signature, tabs)]``, with compute tables
+        padded to the segment's T_max and exchange tables to the segment's
+        M_max (all_to_all) / per-round max widths (ppermute).
+
+        ``overlap=True`` stores the halo split instead: the segment head's
+        exact (indep, dep) tables under ``h:*`` keys plus stacked splits for
+        the scanned tail — landing wavefront w-1's arrivals *between* w's
+        halo-independent and -dependent compute is what lets the collective
+        run concurrently with compute inside the scan."""
+        key = ("seg_tables", comm, density_threshold, overlap)
+        if key in self._cache:
+            return self._cache[key]  # type: ignore[return-value]
+        runs, sigs = self._segment_plan(comm, density_threshold)
+        n, trash = self.spec.n_shards, self.trash
+        segs = []
+        for (s, e) in runs:
+            sig, L = sigs[s], e - s
+            tabs: Dict[str, np.ndarray] = {}
+            if not overlap:
+                self._stack_tables(tabs, "", self.tables[s:e])
+            else:
+                splits = [self._split_tables(w) for w in range(s, e)]
+                for t, (o, u) in splits[0][0].items():
+                    tabs[f"h:{t}:iops"], tabs[f"h:{t}:iout"] = o, u
+                for t, (o, u) in (splits[0][1] or {}).items():
+                    tabs[f"h:{t}:dops"], tabs[f"h:{t}:dout"] = o, u
+                if L > 1:
+                    self._stack_tables(tabs, "i", [sp[0] for sp in splits[1:]])
+                    self._stack_tables(tabs, "d",
+                                       [sp[1] or {} for sp in splits[1:]])
+            if sig[0] == "all_to_all":
+                m_seg = max(self.exchange[w][0].shape[-1] for w in range(s, e))
+                self._stack_exchange(tabs, range(s, e), m_seg)
+            elif sig[0] == "ppermute":
+                for r in range(len(sig[1])):
+                    wr = max(self.sparse_exchange[w][r].width
+                             for w in range(s, e))
+                    snd = np.full((L, n, wr), trash, np.int32)
+                    rcv = np.full((L, n, wr), trash, np.int32)
+                    for j, w in enumerate(range(s, e)):
+                        rnd = self.sparse_exchange[w][r]
+                        snd[j, :, : rnd.width] = rnd.send
+                        rcv[j, :, : rnd.width] = rnd.recv
+                    tabs[f"send{r}"] = np.swapaxes(snd, 0, 1).copy()
+                    tabs[f"recv{r}"] = np.swapaxes(rcv, 0, 1).copy()
+            segs.append((s, e, sig, tabs))
+        self._cache[key] = segs
+        return segs
+
+    # ----------------------------------------------- lowering: executors
 
     def executor(
         self,
@@ -270,14 +507,27 @@ class BlockProgram:
         """Build the jittable SPMD executor.
 
         ``bodies[t](*operand_blocks) -> out_block`` — pure per-block compute
-        (jnp or a Pallas kernel). ``scan=True`` pads tables to uniform shapes
-        and scans over wavefronts (small HLO — deep schedules);
-        ``scan=False`` unrolls, choosing each wavefront's collective from its
-        :class:`CommPattern` under policy ``comm`` ("dense" | "sparse" |
-        "auto"; default "auto") with per-wavefront padding widths.
-        ``overlap=True`` (unrolled only) double-buffers the exchange: issue
-        wavefront w's collective, run w+1's halo-independent tasks, land the
-        arrivals, then run the halo-dependent tasks — compute/comm overlap.
+        (jnp or a Pallas kernel). Three lowerings:
+
+        - ``scan=False`` **unrolls**, choosing each wavefront's collective
+          from its :class:`CommPattern` under policy ``comm`` ("dense" |
+          "sparse" | "auto"; default "auto") with per-wavefront padding —
+          HLO grows linearly with depth.
+        - ``scan=True, comm="dense"`` (the ``scan`` default) is the **pure
+          dense scan**: one ``jax.lax.scan`` over all wavefronts, tables
+          padded to global maxima, every exchange the global all_to_all —
+          minimal HLO, maximal padding.
+        - ``scan=True, comm="sparse"|"auto"`` (or dense with ``overlap``) is
+          the **segmented scan**: the wavefront sequence is partitioned into
+          maximal runs of equal comm signature (:meth:`segments`) and each
+          run becomes one scan carrying that run's sparse collective, padded
+          to the run's own maxima — sparse wire at scan-sized HLO.
+
+        ``overlap=True`` double-buffers the exchange in the unrolled and
+        segmented lowerings: issue wavefront w's collective, run w+1's
+        halo-independent tasks, land the arrivals, then run the
+        halo-dependent tasks — compute/comm overlap, carried across segment
+        boundaries in the segmented scan.
 
         All variants are numerically identical: same bodies over the same
         operand values, in a dependency-respecting order.
@@ -289,93 +539,168 @@ class BlockProgram:
             raise ValueError(f"mesh axis {axis}={mesh.shape[axis]} != {n} shards")
         if comm is None:
             comm = "dense" if scan else "auto"
-        if scan and (comm != "dense" or overlap):
-            raise ValueError(
-                "per-wavefront comm patterns and overlap need unrolled "
-                "lowering (scan=False); scan mode is dense-only")
         if comm not in ("dense", "sparse", "auto"):
             raise ValueError(f"unknown comm policy {comm!r}")
+        if scan:
+            if comm == "dense" and not overlap:
+                return self._dense_scan_executor(bodies, mesh, axis)
+            return self._segmented_scan_executor(
+                bodies, mesh, axis, comm=comm, overlap=overlap,
+                density_threshold=density_threshold)
+        return self._unrolled_executor(
+            bodies, mesh, axis, comm=comm, overlap=overlap,
+            density_threshold=density_threshold)
 
-        def wavefront_compute(local, tbl):
-            # local: [n_slots, b0, b1]; tbl[t] = (ops_idx [T, ar], out_idx [T])
-            for t in self.types:
-                if t not in tbl or tbl[t][0].shape[0] == 0:
-                    continue
-                ops_idx, out_idx = tbl[t]
-                ops = local[ops_idx]                 # [T, arity, b0, b1]
-                res = jax.vmap(lambda o, _t=t: bodies[_t](*jnp.unstack(o)))(ops)
-                local = local.at[out_idx].set(res.astype(local.dtype))
+    def _dense_scan_executor(self, bodies, mesh, axis):
+        """One global scan, dense all_to_all padded to global maxima."""
+        wavefront_compute = self._compute_fn(bodies)
+        tabs_np, M_max = self._dense_scan_tables()
+
+        def run(local, tabs):
+            # local: [1, n_slots, b0, b1]; tabs: {k: [1, W, ...]}
+            tabs0 = {k: v[0] for k, v in tabs.items()}  # [W, ...]
+
+            def step(loc, wtab):
+                loc0 = loc[0]
+                tbl = {t: (wtab[f"{t}:ops"], wtab[f"{t}:out"])
+                       for t in self.types if f"{t}:ops" in wtab}
+                loc0 = wavefront_compute(loc0, tbl)
+                if M_max:
+                    buf = loc0[wtab["send"]]         # [n, M, b0, b1]
+                    buf = jax.lax.all_to_all(buf, axis, split_axis=0,
+                                             concat_axis=0, tiled=True)
+                    loc0 = loc0.at[wtab["recv"].reshape(-1)].set(
+                        buf.reshape(-1, *loc0.shape[1:]))
+                return loc0[None], None
+
+            local, _ = jax.lax.scan(step, local, tabs0)
             return local
 
-        def wavefront_exchange(local, send_idx, recv_idx):
-            # send_idx: [n_dst, M] my blocks for each dst;
-            # recv_idx: [n_src, M] where arrivals from each src land.
-            buf = local[send_idx]                    # [n, M, b0, b1]
-            buf = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
-                                     tiled=True)     # row j <- from shard j
-            return local.at[recv_idx.reshape(-1)].set(
-                buf.reshape(-1, *local.shape[1:]))
+        shmapped = shard_map(
+            run, mesh=mesh,
+            in_specs=(P(axis), {k: P(axis) for k in tabs_np}),
+            out_specs=P(axis))
 
-        if scan:
-            W = len(self.tables)
-            ar = self.arity
-            T_max = {t: max((self.tables[w][t][0].shape[1]
-                             if t in self.tables[w] else 0) for w in range(W))
-                     for t in self.types}
-            M_max = max((e[0].shape[-1] for e in self.exchange), default=0)
-            # Stack tables shard-major: [n_shards, W, ...]; a single P(axis)
-            # sharding then hands each shard exactly its own rows.
-            tabs_np: Dict[str, np.ndarray] = {}
-            for t in self.types:
-                if T_max[t] == 0:
-                    continue
-                ops = np.full((W, n, T_max[t], ar[t]), self.trash, np.int32)
-                out = np.full((W, n, T_max[t]), self.trash, np.int32)
-                for w in range(W):
-                    if t in self.tables[w]:
-                        o, u = self.tables[w][t]
-                        ops[w, :, : o.shape[1]] = o
-                        out[w, :, : u.shape[1]] = u
-                tabs_np[f"{t}:ops"] = np.swapaxes(ops, 0, 1).copy()
-                tabs_np[f"{t}:out"] = np.swapaxes(out, 0, 1).copy()
-            if M_max:
-                send = np.full((W, n, n, M_max), self.trash, np.int32)
-                recv = np.full((W, n, n, M_max), self.trash, np.int32)
-                for w, (s_i, r_i) in enumerate(self.exchange):
-                    send[w, :, :, : s_i.shape[-1]] = s_i
-                    recv[w, :, :, : r_i.shape[-1]] = r_i
-                tabs_np["send"] = np.swapaxes(send, 0, 1).copy()
-                tabs_np["recv"] = np.swapaxes(recv, 0, 1).copy()
+        def entry(blocks):
+            return shmapped(
+                blocks, {k: jnp.asarray(v) for k, v in tabs_np.items()})
 
-            def run(local, tabs):
-                # local: [1, n_slots, b0, b1]; tabs: {k: [1, W, ...]}
-                tabs0 = {k: v[0] for k, v in tabs.items()}  # [W, ...]
+        return entry
 
-                def step(loc, wtab):
-                    loc0 = loc[0]
-                    tbl = {t: (wtab[f"{t}:ops"], wtab[f"{t}:out"])
-                           for t in self.types if f"{t}:ops" in wtab}
-                    loc0 = wavefront_compute(loc0, tbl)
-                    if M_max:
-                        loc0 = wavefront_exchange(loc0, wtab["send"],
-                                                  wtab["recv"])
+    def _segmented_scan_executor(self, bodies, mesh, axis, *, comm,
+                                 overlap, density_threshold):
+        """One ``jax.lax.scan`` per run of equal comm signature, stitched
+        sequentially: sparse (ppermute-round) exchanges inside scans without
+        unrolled-HLO growth. With ``overlap`` the scan carry holds the
+        in-flight exchange buffers (double buffering), and each segment's
+        head wavefront is unrolled so the pending buffers of the *previous*
+        segment — a different carry shape — land across the boundary."""
+        segs = self._segment_tables(comm, density_threshold, overlap)
+        wavefront_compute = self._compute_fn(bodies)
+
+        def tbl_of(wtab, prefix=""):
+            return {t: (wtab[f"{t}:{prefix}ops"], wtab[f"{t}:{prefix}out"])
+                    for t in self.types if f"{t}:{prefix}ops" in wtab}
+
+        def seg_issue(loc0, rows, sig):
+            """Issue one wavefront's exchange from segment-padded tables;
+            returns the in-flight buffers (the scan-carry pytree)."""
+            if sig[0] == "all_to_all":
+                buf = loc0[rows["send"]]             # [n, M_seg, b0, b1]
+                buf = jax.lax.all_to_all(buf, axis, split_axis=0,
+                                         concat_axis=0, tiled=True)
+                return (buf.reshape(-1, *loc0.shape[1:]),)
+            if sig[0] == "ppermute":
+                return tuple(
+                    jax.lax.ppermute(loc0[rows[f"send{r}"]], axis, list(perm))
+                    for r, perm in enumerate(sig[1]))
+            return ()
+
+        def seg_land(loc0, rows, sig, bufs):
+            if sig[0] == "all_to_all":
+                return loc0.at[rows["recv"].reshape(-1)].set(
+                    bufs[0].astype(loc0.dtype))
+            for r in range(len(sig[1]) if sig[0] == "ppermute" else 0):
+                loc0 = loc0.at[rows[f"recv{r}"]].set(
+                    bufs[r].astype(loc0.dtype))
+            return loc0
+
+        def run(local, seg_tabs):
+            loc = local                              # [1, n_slots, b0, b1]
+            for (s, e, sig, _), tabs in zip(segs, seg_tabs):
+                tabs0 = {k: v[0] for k, v in tabs.items()}   # [L, ...]
+
+                def step(loc_, wtab, _sig=sig):
+                    loc0 = wavefront_compute(loc_[0], tbl_of(wtab))
+                    bufs = seg_issue(loc0, wtab, _sig)
+                    loc0 = seg_land(loc0, wtab, _sig, bufs)
                     return loc0[None], None
 
-                local, _ = jax.lax.scan(step, local, tabs0)
-                return local
+                if e - s == 1:
+                    loc, _ = step(loc, {k: v[0] for k, v in tabs0.items()})
+                else:
+                    loc, _ = jax.lax.scan(step, loc, tabs0)
+            return loc
 
-            shmapped = shard_map(
-                run, mesh=mesh,
-                in_specs=(P(axis), {k: P(axis) for k in tabs_np}),
-                out_specs=P(axis))
+        def run_overlap(local, seg_tabs):
+            loc0 = local[0]
+            pending = None                # (sig, recv rows, in-flight bufs)
+            for (s, e, sig, _), tabs in zip(segs, seg_tabs):
+                t0 = {k: v[0] for k, v in tabs.items()}
+                L = e - s
+                send_keys, recv_keys = self._ex_keys(sig)
+                # -- head wavefront (unrolled): lands the previous segment's
+                # pending buffers between its indep and dep compute
+                indep = {t: (t0[f"h:{t}:iops"], t0[f"h:{t}:iout"])
+                         for t in self.types if f"h:{t}:iops" in t0}
+                loc0 = wavefront_compute(loc0, indep)
+                if pending is not None:
+                    loc0 = seg_land(loc0, pending[1], pending[0], pending[2])
+                    pending = None
+                dep = {t: (t0[f"h:{t}:dops"], t0[f"h:{t}:dout"])
+                       for t in self.types if f"h:{t}:dops" in t0}
+                if dep:
+                    loc0 = wavefront_compute(loc0, dep)
+                bufs = seg_issue(loc0, {k: t0[k][0] for k in send_keys}, sig)
+                if L > 1:
+                    xs = {k: t0[k] for k in t0
+                          if not k.startswith("h:")
+                          and (":iops" in k or ":iout" in k
+                               or ":dops" in k or ":dout" in k)}
+                    xs.update({k: t0[k][1:] for k in send_keys})
+                    xs.update({k: t0[k][: L - 1] for k in recv_keys})
 
-            def entry(blocks):
-                return shmapped(
-                    blocks, {k: jnp.asarray(v) for k, v in tabs_np.items()})
+                    def step(carry, wtab, _sig=sig):
+                        c0, *c_bufs = carry
+                        c0 = wavefront_compute(c0, tbl_of(wtab, "i"))
+                        c0 = seg_land(c0, wtab, _sig, c_bufs)
+                        c0 = wavefront_compute(c0, tbl_of(wtab, "d"))
+                        return (c0, *seg_issue(c0, wtab, _sig)), None
 
-            return entry
+                    carry, _ = jax.lax.scan(step, (loc0, *bufs), xs)
+                    loc0, *bufs = carry
+                if sig[0] != "none":
+                    pending = (sig, {k: t0[k][L - 1] for k in recv_keys},
+                               tuple(bufs))
+            if pending is not None:       # W-1 never sends; safety net
+                loc0 = seg_land(loc0, pending[1], pending[0], pending[2])
+            return loc0[None]
 
-        # ------------------------------------------------- unrolled variant
+        tabs_tree = [tabs for (_s, _e, _sig, tabs) in segs]
+        shmapped = shard_map(
+            run_overlap if overlap else run, mesh=mesh,
+            in_specs=(P(axis), jax.tree.map(lambda _: P(axis), tabs_tree)),
+            out_specs=P(axis))
+
+        def entry(blocks):
+            return shmapped(blocks, jax.tree.map(jnp.asarray, tabs_tree))
+
+        return entry
+
+    def _unrolled_executor(self, bodies, mesh, axis, *, comm, overlap,
+                           density_threshold):
+        n = self.spec.n_shards
+        wavefront_compute = self._compute_fn(bodies)
         # Each wavefront's exchange is *issued* as (recv_rows, buf) pairs and
         # *landed* by scattering; with overlap the landing is deferred past
         # the next wavefront's halo-independent compute, so the collectives
@@ -433,6 +758,60 @@ class BlockProgram:
         return shard_map(run_unrolled, mesh=mesh, in_specs=(P(axis),),
                          out_specs=P(axis))
 
+    def plan_lowering(
+        self,
+        *,
+        unroll_cap: int = 64,
+        comm: str = "auto",
+        overlap: bool = True,
+        segment_cap: Optional[int] = None,
+        density_threshold: float = 0.5,
+    ) -> dict:
+        """Decide how :meth:`auto_executor` lowers this program — returned
+        as data so tests and benchmarks can assert on the policy itself.
+
+        - depth <= ``unroll_cap``: **unrolled** (per-wavefront collective
+          choice, exact padding);
+        - deeper, and the comm signatures form <= ``segment_cap`` (default
+          ``unroll_cap``) runs: **segmented scan** — the caller's ``comm`` /
+          ``overlap`` preference is preserved;
+        - deeper and genuinely dense (no wavefront lowers to ppermute, no
+          overlap asked): **pure dense scan** — there is no sparsity to
+          keep, so take the single-scan minimal HLO;
+        - deeper and too fragmented to segment: **dense scan** with
+          ``discards=True`` — the caller's preference is dropped, which
+          :meth:`auto_executor` reports loudly instead of silently.
+        """
+        W = self.schedule.n_wavefronts
+        cap = unroll_cap if segment_cap is None else segment_cap
+        plan = {"comm": comm, "overlap": overlap, "n_wavefronts": W,
+                "discards": False}
+        if W <= unroll_cap:
+            plan.update(mode="unrolled",
+                        reason=f"depth {W} <= unroll_cap {unroll_cap}")
+            return plan
+        if comm == "dense" and not overlap:
+            plan.update(mode="dense_scan", reason="dense lowering requested")
+            return plan
+        runs, _ = self._segment_plan(comm, density_threshold)
+        plan["n_segments"] = len(runs)
+        sparse_any = any(
+            self.lowered_pattern(w, comm, density_threshold) == "ppermute"
+            for w in range(W))
+        if not sparse_any and not overlap:
+            plan.update(mode="dense_scan",
+                        reason="genuinely dense: no wavefront lowers to "
+                               "ppermute under this policy")
+        elif len(runs) <= cap:
+            plan.update(mode="segmented_scan",
+                        reason=f"{len(runs)} segments <= "
+                               f"segment_cap {cap}")
+        else:
+            plan.update(mode="dense_scan", discards=True,
+                        reason=f"comm signatures too fragmented: "
+                               f"{len(runs)} segments > segment_cap {cap}")
+        return plan
+
     def auto_executor(
         self,
         bodies: Dict[str, Callable[..., jnp.ndarray]],
@@ -441,16 +820,38 @@ class BlockProgram:
         *,
         unroll_cap: int = 64,
         density_threshold: float = 0.5,
+        comm: str = "auto",
+        overlap: bool = True,
+        segment_cap: Optional[int] = None,
     ) -> Callable[[jnp.ndarray], jnp.ndarray]:
         """The default lowering policy, shared by every consumer (linalg
-        apps, benchmarks): shallow schedules unroll with per-wavefront
-        sparse/dense collective choice and compute/comm overlap; schedules
-        deeper than ``unroll_cap`` fall back to the compact scan HLO, where
-        uniform shapes force the dense all_to_all."""
-        if self.schedule.n_wavefronts > unroll_cap:
-            return self.executor(bodies, mesh, axis, scan=True)
-        return self.executor(bodies, mesh, axis, scan=False, comm="auto",
-                             overlap=True, density_threshold=density_threshold)
+        apps, benchmarks) — see :meth:`plan_lowering`: shallow schedules
+        unroll with per-wavefront sparse/dense collective choice and
+        compute/comm overlap; deeper schedules keep the sparse wire through
+        the segmented scan; only genuinely dense or hopelessly fragmented
+        schedules take the pure dense scan. When that last fallback discards
+        the caller's ``comm``/``overlap`` preference it is logged loudly —
+        never silent."""
+        plan = self.plan_lowering(
+            unroll_cap=unroll_cap, comm=comm, overlap=overlap,
+            segment_cap=segment_cap, density_threshold=density_threshold)
+        if plan["mode"] == "unrolled":
+            return self.executor(bodies, mesh, axis, scan=False, comm=comm,
+                                 overlap=overlap,
+                                 density_threshold=density_threshold)
+        if plan["mode"] == "segmented_scan":
+            return self.executor(bodies, mesh, axis, scan=True, comm=comm,
+                                 overlap=overlap,
+                                 density_threshold=density_threshold)
+        if plan["discards"]:
+            logger.warning(
+                "auto_executor: depth %d > unroll_cap %d and %s; falling "
+                "back to the pure dense scan and DISCARDING the caller's "
+                "comm=%r/overlap=%r preference (raise segment_cap to force "
+                "the segmented scan, or pass comm='dense' to silence this)",
+                plan["n_wavefronts"], unroll_cap, plan["reason"],
+                comm, overlap)
+        return self.executor(bodies, mesh, axis, scan=True, comm="dense")
 
 
 def build_block_program(spec: BlockPTGSpec, *,

@@ -10,9 +10,11 @@ trapezoid — wavefront(s, m) = s + m, depth = n_stages + n_micro - 1 — and
 its ``comm_plan(w)`` is exactly the set of (s, s+1) stage hand-offs live at
 step w, each a fused buffer per (src, dst) pair. The lockstep lowering here
 turns every wavefront into compute + one collective permute over that
-plan's pairs, so the host PTG runtime, the block executor
-(`core.schedule`), and this pipeline all derive communication from one
-planning layer.
+plan's pairs — with maximal runs of equal permutation folded into
+``jax.lax.scan`` (the segmented-scan policy of `core.schedule`, via the
+shared ``segment_runs``), so deep pipelines emit O(n_stages) HLO — and the
+host PTG runtime, the block executor (`core.schedule`), and this pipeline
+all derive communication from one planning layer.
 
 Backward runs by autodiff: the transpose of a collective permute is the
 reversed permute, so the gradient pipeline is the forward trapezoid
@@ -32,7 +34,7 @@ try:
 except ImportError:  # pragma: no cover — older jax keeps it experimental
     from jax.experimental.shard_map import shard_map
 
-from repro.core.discovery import PTG, WavefrontSchedule
+from repro.core.discovery import PTG, WavefrontSchedule, segment_runs
 from repro.ptg import Graph
 
 
@@ -121,13 +123,23 @@ def _stage_perms(sched: WavefrontSchedule) -> List[List[Tuple[int, int]]]:
 
 def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
                    stage_params: Any, xs: jax.Array, *, mesh: Mesh,
-                   axis: Optional[str] = None) -> jax.Array:
+                   axis: Optional[str] = None,
+                   scan_runs: bool = True) -> jax.Array:
     """Run ``n_micro`` microbatches through a stage-parallel pipeline.
 
     ``stage_params``: pytree whose leaves stack per stage on dim 0 (length =
     mesh axis size); ``xs``: [n_micro, mb, ...] microbatched inputs;
     returns [n_micro, mb, ...] = stage_{S-1}(... stage_0(xs)), numerically
     identical to applying the stages sequentially. Differentiable.
+
+    The lowering uses the block executor's segmentation policy: maximal
+    runs of equal hand-off permutation (``segment_runs`` over the per-
+    wavefront comm patterns) each become one ``jax.lax.scan``. The GPipe
+    trapezoid has ~``2·n_stages`` distinct ramp wavefronts around one
+    steady-state run of length ``n_micro - n_stages + 2``, so a *deep*
+    pipeline (many microbatches) emits O(n_stages) HLO instead of
+    O(n_stages + n_micro) — the stage-graph analogue of the segmented-scan
+    executor. ``scan_runs=False`` forces the fully unrolled lowering.
     """
     axis = axis or mesh.axis_names[0]
     n_stages = mesh.shape[axis]
@@ -140,7 +152,8 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
         p = jax.tree.map(lambda a: a[0], p_local)
         recv = jnp.zeros(xs_full.shape[1:], xs_full.dtype)
         outs = jnp.zeros_like(xs_full)
-        for w, perm in enumerate(perms):
+
+        def wavefront(w, recv, outs, perm):
             m = w - idx                       # microbatch at this stage now
             m_c = jnp.clip(m, 0, n_micro - 1)
             x_in = jnp.where(idx == 0, xs_full[m_c], recv)
@@ -150,6 +163,20 @@ def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
             outs = outs.at[m_c].set(jnp.where(done, y, outs[m_c]))
             if perm:                          # the wavefront's fused hand-off
                 recv = jax.lax.ppermute(y, axis, perm)
+            return recv, outs
+
+        for start, stop in segment_runs([tuple(p_) for p_ in perms]):
+            perm = list(perms[start])         # constant within the run
+            if not scan_runs or stop - start == 1:
+                for w in range(start, stop):
+                    recv, outs = wavefront(w, recv, outs, perm)
+            else:
+                def step(carry, w, _perm=tuple(perms[start])):
+                    r, o = wavefront(w, carry[0], carry[1], list(_perm))
+                    return (r, o), None
+
+                (recv, outs), _ = jax.lax.scan(
+                    step, (recv, outs), jnp.arange(start, stop))
         # only the last stage holds real outputs; broadcast to all shards
         outs = jnp.where(idx == n_stages - 1, outs, jnp.zeros_like(outs))
         return jax.lax.psum(outs, axis)

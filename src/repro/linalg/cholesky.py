@@ -87,12 +87,18 @@ def cholesky_program(nb: int, pr: int, pc: int, b: int,
 
 
 def cholesky_executor(prog: BlockProgram, mesh, axis: str = "shards", *,
-                      matmul=None, trsm=None, unroll_cap: int = 64):
+                      matmul=None, trsm=None, unroll_cap: int = 64,
+                      **policy):
     """Sparsity-aware Cholesky executor with compute/comm overlap: wavefront
     w's panel broadcast is issued before w+1's halo-independent trailing
-    updates (owner-local A_ij accumulations), the paper's Fig 9 overlap."""
+    updates (owner-local A_ij accumulations), the paper's Fig 9 overlap.
+    ``policy`` kwargs (``comm``/``overlap``/``segment_cap``/
+    ``density_threshold``) pass through to ``auto_executor``; note deep
+    Cholesky panel broadcasts change shape every panel (fragmented comm
+    signatures), so past ``unroll_cap`` the policy may legitimately — and
+    loudly — fall back to the dense scan."""
     return prog.auto_executor(cholesky_bodies(matmul, trsm), mesh, axis,
-                              unroll_cap=unroll_cap)
+                              unroll_cap=unroll_cap, **policy)
 
 
 def cholesky_bodies(matmul=None, trsm=None) -> Dict[str, object]:

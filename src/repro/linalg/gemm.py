@@ -155,13 +155,17 @@ def gemm_3d_program(nb: int, q: int, b: int, *, dtype=jnp.float32
 
 
 def gemm_executor(prog: BlockProgram, mesh, axis: str = "shards", *,
-                  matmul=None, unroll_cap: int = 64):
+                  matmul=None, unroll_cap: int = 64, **policy):
     """Sparsity-aware GEMM executor. The eager 2D mapping's wavefront-0
     broadcast is dense (all_to_all); the staged variant's per-k panel sends
     are sparse (ppermute rounds) and overlap with the k-1 rank updates —
-    the compiled form of the paper's AM/compute overlap."""
+    the compiled form of the paper's AM/compute overlap. ``policy`` kwargs
+    (``comm``/``overlap``/``segment_cap``/``density_threshold``) pass
+    through to ``BlockProgram.auto_executor``; past ``unroll_cap`` deep
+    staged schedules keep their sparse per-k sends via the segmented
+    scan instead of cliffing to the dense scan."""
     return prog.auto_executor(gemm_bodies(matmul), mesh, axis,
-                              unroll_cap=unroll_cap)
+                              unroll_cap=unroll_cap, **policy)
 
 
 # ------------------------------------------------------------ bodies/oracle

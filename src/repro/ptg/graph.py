@@ -314,6 +314,19 @@ class Graph:
 
         return build_block_program(self.to_block_spec(), validate=validate)
 
+    def executor(self, bodies, mesh, axis: str = "shards", *,
+                 validate: bool = False, **policy):
+        """One-call compiled lowering: discover, build the program, and
+        return its jittable executor under the shared auto policy
+        (``BlockProgram.plan_lowering``) — unrolled below ``unroll_cap``,
+        segmented scan above it (sparse exchanges at scan-sized HLO), pure
+        dense scan only for genuinely dense or fragmented schedules.
+        ``policy`` kwargs (``unroll_cap``/``comm``/``overlap``/
+        ``segment_cap``/``density_threshold``) pass through to
+        ``auto_executor``."""
+        return self.to_program(validate=validate).auto_executor(
+            bodies, mesh, axis, **policy)
+
     def to_schedule(self, *, validate: bool = False) -> WavefrontSchedule:
         """Just the parallel-discovery schedule (wavefronts + comm plan)."""
         self.build()

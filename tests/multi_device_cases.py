@@ -105,9 +105,10 @@ def case_cholesky():
 
 
 def case_lowering_identity():
-    """Every lowering of the same program — scan, unrolled dense, sparse,
-    auto, and the double-buffered overlap modes — is bit-identical on GEMM
-    and Cholesky (same bodies over the same operand values)."""
+    """Every lowering of the same program — dense scan, segmented scan
+    (sparse/auto, with and without overlap), unrolled dense, sparse, auto,
+    and the double-buffered overlap modes — is bit-identical on GEMM and
+    Cholesky (same bodies over the same operand values)."""
     from repro.core.schedule import build_block_program
     from repro.linalg.cholesky import (cholesky_bodies, cholesky_spec,
                                        make_spd_blocks)
@@ -123,6 +124,11 @@ def case_lowering_identity():
 
     variants = (
         dict(scan=True),
+        dict(scan=True, comm="sparse"),
+        dict(scan=True, comm="auto"),
+        dict(scan=True, comm="auto", overlap=True),
+        dict(scan=True, comm="sparse", overlap=True),
+        dict(scan=True, comm="dense", overlap=True),
         dict(scan=False, comm="sparse"),
         dict(scan=False, comm="auto"),
         dict(scan=False, comm="dense", overlap=True),
@@ -202,6 +208,52 @@ def case_taskbench_identity():
             np.testing.assert_array_equal(np.asarray(got[blk]),
                                           np.asarray(ref[blk]),
                                           err_msg=f"{pattern} {blk}")
+
+
+def case_segmented_identity():
+    """The segmented-scan executor is bit-identical to the unrolled
+    ``comm="auto"`` reference AND to the pure dense scan across Task-Bench
+    dependence patterns x shard counts x depths — including ragged
+    boundaries (depth not a multiple of any segment length, single-
+    wavefront segments from fft's stride cycling, and random's all-dense
+    schedules degenerating to one all_to_all run)."""
+    from repro.core.schedule import build_block_program
+    from benchmarks.taskbench_scaling import (taskbench_blocks,
+                                              taskbench_bodies,
+                                              taskbench_spec)
+
+    width, b = 8, 4
+    bodies = taskbench_bodies()
+    for pattern in ("stencil", "fft", "tree", "random"):
+        for n_shards, depth in ((2, 7), (4, 5), (4, 13)):
+            mesh = _mesh(n_shards)
+            spec, _deps = taskbench_spec(pattern, width, depth, n_shards, b,
+                                         fan=2)
+            prog = build_block_program(spec)
+            segs = prog.segments()
+            assert segs[0][0] == 0 and segs[-1][1] == depth
+            blocks = taskbench_blocks(width, depth, b)
+            packed = jnp.asarray(prog.pack(blocks))
+            with mesh:
+                ref = np.asarray(jax.jit(prog.executor(
+                    bodies, mesh, scan=False, comm="auto"))(packed))
+                for kw in (dict(scan=True),                    # dense scan
+                           dict(scan=True, comm="auto"),
+                           dict(scan=True, comm="auto", overlap=True),
+                           dict(scan=True, comm="sparse", overlap=True)):
+                    got = np.asarray(jax.jit(prog.executor(
+                        bodies, mesh, **kw))(packed))
+                    # compare real slots only (trash accumulates padding)
+                    for blk, (s, slot) in prog.slot_of.items():
+                        np.testing.assert_array_equal(
+                            ref[s, slot], got[s, slot],
+                            err_msg=f"{pattern}/s{n_shards}/d{depth} "
+                                    f"{kw} {blk}")
+                    for (s, blk), slot in prog.halo_slot.items():
+                        np.testing.assert_array_equal(
+                            ref[s, slot], got[s, slot],
+                            err_msg=f"{pattern}/s{n_shards}/d{depth} "
+                                    f"{kw} halo {blk}")
 
 
 def case_unified_graph():

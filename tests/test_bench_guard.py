@@ -1,10 +1,14 @@
-"""Unit tests for the CI bench-regression guard (wire-efficiency trend)."""
+"""Unit tests for the CI bench-regression guard (wire-efficiency trend +
+the lower-is-better compile-size metrics of the segmented-scan rows)."""
 
 import json
 import subprocess
 import sys
 
-from benchmarks.check_regression import find_regressions, metric_rows
+import pytest
+
+from benchmarks.check_regression import (find_regressions, metric_rows,
+                                         parse_metric)
 
 
 def _rows(**eff):
@@ -46,6 +50,32 @@ def test_improvements_never_fail():
     assert checked == 1 and reg == []
 
 
+def _frac_rows(**frac):
+    return [{"name": n, "us_per_call": 1.0, "hlo_frac": v}
+            for n, v in frac.items()]
+
+
+def test_parse_metric_directions():
+    assert parse_metric("wire_efficiency") == ("wire_efficiency", False)
+    assert parse_metric("hlo_frac:lower") == ("hlo_frac", True)
+    assert parse_metric("hlo_frac:higher") == ("hlo_frac", False)
+    with pytest.raises(ValueError):
+        parse_metric("hlo_frac:sideways")
+
+
+def test_lower_is_better_regression_is_an_increase():
+    base = _frac_rows(x=0.10, y=0.10)
+    new = _frac_rows(x=0.13, y=0.115)       # +30% fails, +15% passes
+    checked, reg = find_regressions(new, base, metric="hlo_frac",
+                                    lower_is_better=True)
+    assert checked == 2
+    assert reg == [("x", 0.10, 0.13)]
+    # a *drop* of a lower-is-better metric is an improvement, never a fail
+    checked, reg = find_regressions(_frac_rows(x=0.01), _frac_rows(x=0.5),
+                                    metric="hlo_frac", lower_is_better=True)
+    assert checked == 1 and reg == []
+
+
 def test_cli_exit_codes(tmp_path):
     base = tmp_path / "base.json"
     new = tmp_path / "new.json"
@@ -78,3 +108,32 @@ def test_cli_exit_codes(tmp_path):
          "--baseline", str(base)], capture_output=True, text=True)
     assert empty.returncode == 1
     assert "no-op" in empty.stdout
+
+
+def test_cli_multi_metric_directions(tmp_path):
+    """One invocation guards wire_efficiency (higher) AND hlo_frac (lower),
+    exactly as the CI bench-smoke step invokes it."""
+    def rows(eff, frac):
+        return {"rows": [{"name": "deep", "us_per_call": 1.0,
+                          "wire_efficiency": eff, "hlo_frac": frac}]}
+
+    base = tmp_path / "base.json"
+    new = tmp_path / "new.json"
+    base.write_text(json.dumps(rows(1.0, 0.10)))
+    cmd = [sys.executable, "benchmarks/check_regression.py", str(new),
+           "--baseline", str(base),
+           "--metric", "wire_efficiency", "--metric", "hlo_frac:lower"]
+
+    new.write_text(json.dumps(rows(0.95, 0.11)))
+    ok = subprocess.run(cmd, capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+
+    new.write_text(json.dumps(rows(1.0, 0.20)))      # HLO doubled
+    bad = subprocess.run(cmd, capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "REGRESSION deep: hlo_frac" in bad.stdout
+
+    new.write_text(json.dumps(rows(0.5, 0.10)))      # efficiency halved
+    bad = subprocess.run(cmd, capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "REGRESSION deep: wire_efficiency" in bad.stdout

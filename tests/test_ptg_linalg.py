@@ -129,7 +129,8 @@ def test_cholesky_host_matches_oracle():
     "gemm_2d", "gemm_3d", "gemm_unrolled_matches_scan", "cholesky",
     "cholesky_host_matches_compiled", "pipeline_matches_sequential",
     "elastic_restore_smaller_mesh", "lowering_identity",
-    "taskbench_identity", "unified_graph", "pipeline_train_step",
+    "taskbench_identity", "segmented_identity", "unified_graph",
+    "pipeline_train_step",
 ])
 def test_compiled_multi_device(case):
     env = dict(os.environ,

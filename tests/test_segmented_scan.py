@@ -1,0 +1,218 @@
+"""Property tests for the segmented-scan lowering's host-side machinery:
+comm signatures, run segmentation, segment-padded wire accounting, table
+memoization, and the ``plan_lowering`` policy (unrolled / segmented scan /
+dense scan, with the loud fragmented fallback).
+
+Hypothesis (real in CI, deterministic stub locally) hammers random layered
+block-PTGs — bit-identity of the segmented executors vs the unrolled and
+dense-scan references runs on 8 emulated devices in
+``tests/multi_device_cases.py`` (cases ``lowering_identity`` and
+``segmented_identity``).
+"""
+
+import logging
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.discovery import segment_runs
+from repro.core.schedule import build_block_program
+
+from tests.test_schedule_property import random_layered_ptg
+
+
+# --------------------------------------------------------- segment_runs
+
+@settings(deadline=None, max_examples=25)
+@given(items=st.lists(st.integers(0, 3), min_size=0, max_size=30))
+def test_segment_runs_partitions_into_maximal_runs(items):
+    runs = segment_runs(items)
+    # exact partition of [0, len), in order
+    assert [i for s, e in runs for i in range(s, e)] == list(range(len(items)))
+    for s, e in runs:
+        assert e > s
+        assert all(items[i] == items[s] for i in range(s, e))  # constant
+    for (s1, e1), (s2, e2) in zip(runs, runs[1:]):             # maximal
+        assert e1 == s2
+        assert items[s1] != items[s2]
+
+
+# ------------------------------------------- signatures and segmentation
+
+@settings(deadline=None, max_examples=15,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n_layers=st.integers(2, 6),
+    width=st.integers(1, 6),
+    n_shards=st.integers(1, 5),
+    fan_in=st.integers(1, 4),
+    comm=st.sampled_from(["dense", "sparse", "auto"]),
+    seed=st.integers(0, 2**31),
+)
+def test_segments_partition_by_signature(n_layers, width, n_shards,
+                                         fan_in, comm, seed):
+    rng = np.random.default_rng(seed)
+    spec, _bodies, _blocks, _oracle = random_layered_ptg(
+        rng, n_layers, width, n_shards, fan_in)
+    prog = build_block_program(spec)
+    W = prog.schedule.n_wavefronts
+    sigs = [prog.comm_signature(w, comm) for w in range(W)]
+    segs = prog.segments(comm)
+
+    # exact partition, constant within, different across boundaries
+    assert [w for s, e in segs for w in range(s, e)] == list(range(W))
+    for s, e in segs:
+        assert all(sigs[w] == sigs[s] for w in range(s, e))
+    for (s1, _e1), (s2, _e2) in zip(segs, segs[1:]):
+        assert sigs[s1] != sigs[s2]
+
+    for w, sig in enumerate(sigs):
+        choice = prog.lowered_pattern(w, comm)
+        assert sig[0] == choice  # signature kind == lowering choice
+        if sig[0] == "ppermute":
+            # the static scan-body structure: the wavefront's own rounds
+            assert sig[1] == tuple(tuple(r.perm)
+                                   for r in prog.sparse_exchange[w])
+        if comm == "dense":
+            assert sig[0] in ("all_to_all", "none")
+
+
+@settings(deadline=None, max_examples=15,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n_layers=st.integers(2, 6),
+    width=st.integers(1, 6),
+    n_shards=st.integers(2, 5),
+    fan_in=st.integers(1, 4),
+    seed=st.integers(0, 2**31),
+)
+def test_segmented_comm_stats_accounting(n_layers, width, n_shards,
+                                         fan_in, seed):
+    rng = np.random.default_rng(seed)
+    spec, _bodies, _blocks, _oracle = random_layered_ptg(
+        rng, n_layers, width, n_shards, fan_in)
+    prog = build_block_program(spec)
+
+    auto = prog.comm_stats(comm="auto")
+    seg = prog.comm_stats(comm="auto", segmented=True)
+    # same payload, only padding differs; per-segment padding can never
+    # undercut the per-wavefront exact padding of the unrolled lowering
+    assert seg["real_bytes"] == auto["real_bytes"]
+    assert seg["n_segments"] == len(prog.segments("auto"))
+    assert seg["total_wire_bytes"] >= auto["total_wire_bytes"]
+    if seg["total_wire_bytes"]:
+        assert 0.0 < seg["wire_efficiency"] <= 1.0
+    for row_seg, row_auto in zip(seg["per_wavefront"],
+                                 auto["per_wavefront"]):
+        assert row_seg["pattern"] == row_auto["pattern"]
+        assert row_seg["wire_blocks"] >= row_auto["wire_blocks"]
+        assert row_seg["real_blocks"] == row_auto["real_blocks"]
+    # the per-segment breakdown re-sums to the totals
+    assert sum(r["real_bytes"] for r in seg["segments"]) == seg["real_bytes"]
+    assert (sum(r["padded_bytes"] for r in seg["segments"])
+            == seg["padded_bytes"])
+    for r in seg["segments"]:
+        assert 0 <= r["start"] < r["stop"]
+        assert r["wavefronts"] == r["stop"] - r["start"]
+        assert r["padded_bytes"] >= 0
+
+
+# ----------------------------------------------------------- memoization
+
+def test_lowered_tables_are_memoized():
+    """The O(W·n·T) numpy stacking runs once per (schedule, mode): repeat
+    calls return the *same objects* from the program's cache."""
+    rng = np.random.default_rng(7)
+    spec, _bodies, _blocks, _oracle = random_layered_ptg(rng, 5, 4, 3, 2)
+    prog = build_block_program(spec)
+
+    assert prog._dense_scan_tables() is prog._dense_scan_tables()
+    assert (prog._segment_tables("auto", 0.5, False)
+            is prog._segment_tables("auto", 0.5, False))
+    assert (prog._segment_tables("auto", 0.5, True)
+            is prog._segment_tables("auto", 0.5, True))
+    # distinct modes get distinct cache entries
+    assert (prog._segment_tables("auto", 0.5, False)
+            is not prog._segment_tables("auto", 0.5, True))
+    for w in range(prog.schedule.n_wavefronts):
+        assert prog._split_tables(w) == prog._split_tables(w)
+        assert prog._split_tables(w)[0] is prog._split_tables(w)[0]
+
+
+# -------------------------------------------------- plan_lowering policy
+
+def _taskbench(pattern, width, depth, n_shards):
+    from benchmarks.taskbench_scaling import taskbench_spec
+
+    spec, _deps = taskbench_spec(pattern, width, depth, n_shards, 4)
+    return build_block_program(spec)
+
+
+def test_plan_shallow_unrolls():
+    prog = _taskbench("stencil", 8, 6, 4)
+    plan = prog.plan_lowering(unroll_cap=64)
+    assert plan["mode"] == "unrolled" and not plan["discards"]
+
+
+def test_plan_deep_sparse_segments():
+    """Past the unroll cap, a stencil schedule keeps its sparse wire via
+    the segmented scan — the old dense-scan cliff is gone."""
+    prog = _taskbench("stencil", 16, 70, 8)
+    plan = prog.plan_lowering(unroll_cap=64)
+    assert plan["mode"] == "segmented_scan"
+    assert plan["n_segments"] <= 4
+    assert not plan["discards"]
+    # and the segmented wire matches the unrolled auto reference
+    seg = prog.comm_stats(comm="auto", segmented=True)
+    auto = prog.comm_stats(comm="auto")
+    assert seg["wire_efficiency"] >= 0.9 * auto["wire_efficiency"]
+
+
+def test_plan_deep_fragmented_falls_back_loudly(caplog):
+    """fft's stride cycling gives every wavefront a different ppermute
+    signature: too fragmented to segment, so the policy falls back to the
+    dense scan — explicitly (discards=True + a logged warning), never
+    silently. Also exercises ragged shapes: the fft run list contains
+    single-wavefront segments."""
+    prog = _taskbench("fft", 16, 70, 8)
+    plan = prog.plan_lowering(unroll_cap=64)
+    assert plan["mode"] == "dense_scan"
+    assert plan["discards"]
+    assert "fragmented" in plan["reason"]
+    assert any(e - s == 1 for s, e in prog.segments("auto"))
+
+    # auto_executor logs the discard before touching the mesh; a 1-device
+    # mesh then fails the shard-count check, which is fine — the warning
+    # must already be out.
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("shards",))
+    with caplog.at_level(logging.WARNING, logger="repro.core.schedule"):
+        with pytest.raises(ValueError, match="shards"):
+            prog.auto_executor({}, mesh, unroll_cap=64)
+    assert any("DISCARDING" in r.message for r in caplog.records)
+
+
+def test_plan_dense_request_and_genuinely_dense():
+    # explicit dense ask -> pure dense scan, no discard
+    prog = _taskbench("stencil", 16, 70, 8)
+    plan = prog.plan_lowering(unroll_cap=64, comm="dense", overlap=False)
+    assert plan["mode"] == "dense_scan" and not plan["discards"]
+    # random at 4 shards classifies dense everywhere: with no overlap asked
+    # there is no sparsity to keep -> pure dense scan, not a discard
+    prog = _taskbench("random", 16, 70, 4)
+    plan = prog.plan_lowering(unroll_cap=64, overlap=False)
+    assert plan["mode"] == "dense_scan" and not plan["discards"]
+    assert "genuinely dense" in plan["reason"]
+    # but with overlap (the default) the segmented scan carries it
+    plan = prog.plan_lowering(unroll_cap=64)
+    assert plan["mode"] == "segmented_scan"
+
+
+def test_executor_rejects_unknown_comm():
+    prog = _taskbench("stencil", 4, 3, 1)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("shards",))
+    with pytest.raises(ValueError, match="unknown comm policy"):
+        prog.executor({}, mesh, comm="bogus")
