@@ -10,7 +10,10 @@ lower-is-better one (regression = rise above ``base * (1 + tol)``).
 Defaults guard ``wire_efficiency`` — the tracked trajectory of ROADMAP
 §Perf iteration log; CI additionally passes ``hlo_frac:lower`` (segmented
 / unrolled StableHLO bytes of the deep Task-Bench rows) so the
-segmented-scan executor's compile-size win cannot silently erode. A case
+segmented-scan executor's compile-size win cannot silently erode, and
+``edge_frac:lower`` (max per-shard lazy derived edges / eager global
+edges of the discovery rows) so the lazy derivation's locality win
+cannot either. A case
 that moves more than ``--tol`` (default 20%) past its baseline fails the
 job; new cases (no baseline row) and timing rows (no metric) pass
 through. us-per-task and compile_seconds are deliberately NOT guarded:

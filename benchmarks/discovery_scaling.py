@@ -1,0 +1,110 @@
+"""Discovery-cost scaling: lazy per-shard derivation vs the eager global
+scan — the graph-build half of the Task-Bench scaling wall (1908.05790).
+
+TaskTorrent's claim is that no rank ever materializes the global task
+graph: the DAG is "completely distributed and discovered in parallel".
+``repro.ptg.Graph`` honors that since the lazy redesign —
+``derive_local(shard)`` scans only the shard's owned tasks plus their halo
+(one ``reads``/``writes`` overlap away) — while ``Graph.build`` remains
+the eager oracle that materializes everything. This module measures both,
+per (pattern, width, depth, n_shards):
+
+- ``eager_seconds`` / ``eager_edges`` — the global scan: wall time and
+  edge-list entries it materializes (the O(width x depth) wall);
+- ``lazy_seconds_max`` / ``lazy_edges_max`` — the *slowest / largest
+  single shard* of the lazy derivation: what one rank of a real
+  distributed run would pay (each rank derives only its own view; the
+  sweep over shards here is the single-host emulation of all ranks);
+- ``owned_halo_max`` — max over shards of owned + halo task count, the
+  quantity the lazy cost is supposed to track;
+- ``edge_frac`` = lazy_edges_max / eager_edges (lower is better; guarded
+  by CI via ``check_regression.py --metric edge_frac:lower``);
+- ``edges_per_owned_halo`` = lazy_edges_max / owned_halo_max — the
+  scaling witness: it stays flat across shard counts and graph sizes
+  while ``edge_frac`` falls, i.e. per-shard cost follows owned + halo,
+  not the global index space.
+
+Two sweeps make that visible: ``shards`` grows the shard count at a fixed
+global graph (per-shard state must shrink ~1/S), and ``depth`` grows the
+global graph at a fixed shard grid with a fixed per-shard strip (per-shard
+state must grow with the strip, staying a constant fraction of eager).
+The eager-vs-lazy *correctness* oracle lives in
+``tests/test_lazy_discovery.py`` (edge-for-edge identity); this module
+only accounts cost.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.taskbench_scaling import taskbench_graph
+
+# (tag, pattern, width, depth, shard counts) — ≥4 shard counts per the
+# acceptance scenario; sizes chosen to stay CI-cheap (< a few seconds).
+SHARD_SWEEP = ("shards", "stencil", 32, 24, (2, 4, 8, 16))
+DEPTH_SWEEP = ("depth", "stencil", 16, (16, 32, 64, 128), 8)
+
+
+def eager_cost(pattern, width, depth, n_shards, b=4):
+    """(seconds, edge-list entries) of the eager global scan."""
+    g, _ = taskbench_graph(pattern, width, depth, n_shards, b)
+    t0 = time.perf_counter()
+    g.build()
+    secs = time.perf_counter() - t0
+    edges = sum(len(g.in_deps(k)) + len(g.out_deps(k)) for k in g.tasks)
+    return secs, edges
+
+
+def lazy_cost(pattern, width, depth, n_shards, b=4):
+    """Per-shard derivation cost: list of (seconds, stats) over shards,
+    each on a fresh graph so no cross-shard caching flatters the numbers."""
+    out = []
+    for s in range(n_shards):
+        g, _ = taskbench_graph(pattern, width, depth, n_shards, b)
+        t0 = time.perf_counter()
+        view = g.derive_local(s)
+        out.append((time.perf_counter() - t0, view.stats))
+    return out
+
+
+def _row(report, tag, pattern, width, depth, n_shards):
+    n_tasks = width * depth
+    eager_s, eager_e = eager_cost(pattern, width, depth, n_shards)
+    per_shard = lazy_cost(pattern, width, depth, n_shards)
+    lazy_s_max = max(s for s, _ in per_shard)
+    lazy_s_mean = sum(s for s, _ in per_shard) / len(per_shard)
+    lazy_e_max = max(st["derived_edges"] for _, st in per_shard)
+    owned_halo = [st["n_owned"] + st["n_halo"] for _, st in per_shard]
+    edge_frac = lazy_e_max / eager_e if eager_e else 0.0
+    report(
+        f"discovery/{tag}/{pattern}/w{width}d{depth}s{n_shards}",
+        lazy_s_max * 1e6,
+        f"edge_frac={edge_frac:.3f};lazy_edges_max={lazy_e_max};"
+        f"eager_edges={eager_e};owned_halo_max={max(owned_halo)}",
+        extra={
+            "pattern": pattern, "width": width, "depth": depth,
+            "n_shards": n_shards, "n_tasks": n_tasks,
+            "eager_seconds": eager_s, "eager_edges": eager_e,
+            "lazy_seconds_max": lazy_s_max,
+            "lazy_seconds_mean": lazy_s_mean,
+            "lazy_edges_max": lazy_e_max,
+            "owned_halo_max": max(owned_halo),
+            "owned_halo_mean": sum(owned_halo) / len(owned_halo),
+            "edge_frac": edge_frac,
+            "edges_per_owned_halo": lazy_e_max / max(owned_halo),
+        },
+    )
+    return edge_frac
+
+
+def run(report) -> None:
+    tag, pattern, width, depth, shard_counts = SHARD_SWEEP
+    fracs = [_row(report, tag, pattern, width, depth, s)
+             for s in shard_counts]
+    assert fracs == sorted(fracs, reverse=True), (
+        "per-shard derived edges must shrink as shards grow "
+        f"(got edge_frac {fracs} over shards {shard_counts})")
+
+    tag, pattern, width, depths, n_shards = DEPTH_SWEEP
+    for d in depths:
+        _row(report, tag, pattern, width, d, n_shards)

@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   cholesky_scaling   Fig 9  (distributed Cholesky: scaling, block, rho)
   taskbench_scaling  Task Bench (1908.05790): dependence-pattern sweep over
                      discovery -> comm_plan -> executor, wire efficiency
+  discovery_scaling  graph-build cost: lazy per-shard derivation (owned +
+                     halo) vs the eager global scan, edge_frac guarded
   roofline           §Roofline (reads reports/dryrun JSONs)
 
 ``--json [PATH]`` additionally writes a ``BENCH_<utc>.json`` artifact with
@@ -68,8 +70,9 @@ def main() -> None:
                     help="write rows to PATH (default BENCH_<utc>.json)")
     args = ap.parse_args()
 
-    from benchmarks import (cholesky_scaling, gemm_scaling, micro_deps,
-                            micro_overhead, roofline, taskbench_scaling)
+    from benchmarks import (cholesky_scaling, discovery_scaling,
+                            gemm_scaling, micro_deps, micro_overhead,
+                            roofline, taskbench_scaling)
 
     modules = {
         "micro_overhead": micro_overhead,
@@ -77,6 +80,7 @@ def main() -> None:
         "gemm_scaling": gemm_scaling,
         "cholesky_scaling": cholesky_scaling,
         "taskbench_scaling": taskbench_scaling,
+        "discovery_scaling": discovery_scaling,
         "roofline": roofline,
     }
     if args.only:

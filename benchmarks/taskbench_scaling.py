@@ -98,10 +98,11 @@ def taskbench_graph(pattern: str, width: int, depth: int, n_shards: int,
 
 def taskbench_spec(pattern: str, width: int, depth: int, n_shards: int,
                    b: int = 8, *, fan: int = 3, seed: int = 0,
-                   dtype=jnp.float32) -> Tuple[BlockPTGSpec, Dict]:
+                   dtype=jnp.float32, lazy: bool = True
+                   ) -> Tuple[BlockPTGSpec, Dict]:
     g, deps = taskbench_graph(pattern, width, depth, n_shards, b,
                               fan=fan, seed=seed, dtype=dtype)
-    return g.to_block_spec(), deps
+    return g.to_block_spec(lazy=lazy), deps
 
 
 def taskbench_bodies(max_fan: int = 8) -> Dict[str, object]:

@@ -1,0 +1,118 @@
+"""Docs link check: every relative markdown link must resolve.
+
+Scans README.md, benchmarks/README.md, and everything under docs/ for
+inline markdown links ``[text](target)``; fails (exit 1, one line per
+problem) when a relative target does not exist on disk or when an anchor
+(``file.md#section`` or ``#section``) names no heading in the target file.
+External links (http/https/mailto) are not fetched — this guard is about
+the repo's own doc tree staying navigable as files move across PRs.
+
+Anchors are matched GitHub-style: heading text lowercased, punctuation
+stripped, spaces to dashes (duplicate headings get ``-1``, ``-2``, ...).
+
+    python scripts/check_links.py            # default file set
+    python scripts/check_links.py FILE...    # explicit files/dirs
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_TARGETS = ["README.md", "docs", "benchmarks/README.md"]
+
+# inline links, skipping images; stop at the first unescaped ')'
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def heading_anchors(md_path: Path) -> set:
+    """GitHub-style anchor slugs for every heading in ``md_path``."""
+    anchors: set = set()
+    counts: dict = {}
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence or not line.startswith("#"):
+            continue
+        text = line.lstrip("#").strip()
+        # strip markdown emphasis/code markers (not underscores — GitHub
+        # keeps them in slugs), then non-word punctuation
+        text = re.sub(r"[*`]", "", text)
+        slug = re.sub(r"[^\w\- ]", "", text.lower()).strip()
+        slug = re.sub(r"\s+", "-", slug)
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def md_files(targets):
+    """Resolve targets to markdown files; a missing target is itself a
+    problem (a renamed README/docs tree must fail the check, not shrink
+    its coverage silently). Returns (files, problems)."""
+    files, problems = [], []
+    for t in targets:
+        p = (ROOT / t) if not Path(t).is_absolute() else Path(t)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.md")))
+        elif p.exists():
+            files.append(p)
+        else:
+            problems.append(f"missing check target {t!r}")
+    return files, problems
+
+
+def check_file(md: Path) -> list:
+    problems = []
+    in_fence = False
+    for lineno, line in enumerate(
+            md.read_text(encoding="utf-8").splitlines(), 1):
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:
+                continue
+            path_part, _, anchor = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            rel = md.relative_to(ROOT)
+            if path_part and not dest.exists():
+                problems.append(
+                    f"{rel}:{lineno}: broken link {target!r} "
+                    f"(no such file {path_part!r})")
+                continue
+            if anchor:
+                if dest.is_dir() or dest.suffix.lower() != ".md":
+                    problems.append(
+                        f"{rel}:{lineno}: anchor on non-markdown "
+                        f"target {target!r}")
+                elif anchor.lower() not in heading_anchors(dest):
+                    problems.append(
+                        f"{rel}:{lineno}: dangling anchor {target!r} "
+                        f"(no heading '#{anchor}' in "
+                        f"{dest.relative_to(ROOT)})")
+    return problems
+
+
+def main(argv=None) -> int:
+    targets = (argv if argv else DEFAULT_TARGETS)
+    files, problems = md_files(targets)
+    for md in files:
+        problems.extend(check_file(md))
+    for p in problems:
+        print(p)
+    print(f"checked {len(files)} file(s): "
+          f"{'OK' if not problems else f'{len(problems)} problem(s)'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -16,13 +16,24 @@ O(local tasks + halo edges) — the paper's scalability property, checked by
 per-shard task lists leveled into wavefronts plus a batched communication
 plan (cross-shard edges fused per (wavefront, src, dst) — the compiled
 analogue of the paper's large-AM copy-avoidance).
+
+Two edge oracles drive the same loop:
+
+- :func:`discover` — a global :class:`PTG` (eagerly derived edge dicts or
+  hand-written edge rules);
+- :func:`discover_local` — per-shard *lazy views*
+  (:meth:`repro.ptg.Graph.derive_local`), each holding edges only for its
+  owned tasks + halo, so the full derivation also never materializes the
+  global graph (see docs/architecture.md). :func:`union_ptg` is the
+  PTG-protocol facade over such views for consumers that must follow an
+  edge to its remote endpoint (consistency checks, lowering tables).
 """
 
 from __future__ import annotations
 
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Hashable, List, Sequence, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
 
 K = Hashable
 
@@ -96,6 +107,11 @@ class Message:
 
 @dataclass
 class ShardSchedule:
+    """One shard's discovered schedule: ``wavefronts[level]`` lists the
+    tasks this shard runs at that level, in discovery order. ``expanded``
+    counts the fulfill events the shard processed — the locality metric:
+    it is O(owned tasks + halo edges), never O(global DAG)."""
+
     shard: int
     wavefronts: List[List[K]] = field(default_factory=list)  # level -> tasks
     expanded: int = 0  # tasks this shard touched during discovery (locality)
@@ -200,6 +216,13 @@ def segment_runs(items: Sequence[Hashable]) -> List[Tuple[int, int]]:
 
 @dataclass
 class WavefrontSchedule:
+    """The complete output of parallel discovery: per-shard wavefront task
+    lists (normalized to equal depth for the lockstep lowerings), the fused
+    cross-shard message plan grouped by producer wavefront, and the global
+    leveling ``level_of``. Invariant: every dependency is scheduled at a
+    strictly earlier level than its dependents, and every cross-shard edge
+    has exactly one message at the producer's level (:meth:`validate`)."""
+
     n_shards: int
     shards: List[ShardSchedule]
     # messages grouped by producer wavefront, then (src, dst) — one fused
@@ -270,20 +293,21 @@ class WavefrontSchedule:
                                for m in group), (d, k)
 
 
-def discover(ptg: PTG, seeds: Sequence[K], n_shards: int, *,
-             validate: bool = False) -> WavefrontSchedule:
-    """Message-driven parallel discovery (run symbolically, shard-local).
+def _run_discovery(view_of: Callable[[int], object],
+                   seed_pairs: Sequence[Tuple[K, int]],
+                   n_shards: int) -> WavefrontSchedule:
+    """The bulk-synchronous discovery loop shared by :func:`discover`
+    (global PTG) and :func:`discover_local` (per-shard lazy views).
 
-    Implemented as a bulk-synchronous emulation of the asynchronous runtime:
-    at each round every shard independently expands the ready tasks it owns,
-    posting discovery messages for remote out-edges; messages are delivered
-    between rounds. Wavefront level(k) = 1 + max(level of deps) — the ALAP/
-    ASAP leveling the lockstep lowering needs.
-
-    ``validate=True`` additionally runs :meth:`PTG.check_consistency` over
-    every discovered task, so hand-written in/out-edge pairs get the same
-    mutual-inverse guarantee the :mod:`repro.ptg` builder provides by
-    construction.
+    ``view_of(s)`` returns the edge oracle shard ``s`` expands through —
+    anything exposing ``in_deps`` / ``out_deps`` / ``mapping``. Shard ``s``
+    only ever queries its own view, and only for tasks mapped to it plus
+    the out-edge targets those tasks fulfill (the halo) — so a per-shard
+    view never needs the global edge dicts. ``seed_pairs`` is the
+    ``(task, shard)`` list of zero-indegree roots, per-shard in program
+    order. Invariant: the schedule depends only on the edge *values* the
+    views return, so any two view sets agreeing edge-for-edge produce
+    identical wavefronts and message plans.
     """
     shards = [ShardSchedule(s) for s in range(n_shards)]
     # per-shard discovery state — *disjoint by construction*; a shard only
@@ -295,20 +319,21 @@ def discover(ptg: PTG, seeds: Sequence[K], n_shards: int, *,
 
     # "fulfill" events pending per shard: (task, from_level)
     inbox: List[List[Tuple[K, int]]] = [[] for _ in range(n_shards)]
-    for k in seeds:
-        inbox[ptg.mapping(k) % n_shards].append((k, -1))
+    for k, s in seed_pairs:
+        inbox[s % n_shards].append((k, -1))
 
     round_ = 0
     while any(inbox):
         next_inbox: List[List[Tuple[K, int]]] = [[] for _ in range(n_shards)]
         for s in range(n_shards):
+            view = view_of(s)
             sched = shards[s]
             ready: List[Tuple[K, int]] = []
             for k, from_level in inbox[s]:
                 sched.expanded += 1
                 cnt = remaining[s].get(k)
                 if cnt is None:
-                    cnt = len(ptg.in_deps(k))
+                    cnt = len(view.in_deps(k))
                     cnt = max(cnt, 1)  # seeds carry one synthetic dep
                 cnt -= 1
                 lvl = level_of.get(k, -1)
@@ -323,8 +348,8 @@ def discover(ptg: PTG, seeds: Sequence[K], n_shards: int, *,
                 while len(sched.wavefronts) <= sched_lvl:
                     sched.wavefronts.append([])
                 sched.wavefronts[sched_lvl].append(k)
-                for d in ptg.out_deps(k):
-                    ds = ptg.mapping(d) % n_shards
+                for d in view.out_deps(k):
+                    ds = view.mapping(d) % n_shards
                     if ds != s:
                         messages[sched_lvl][(s, ds)].append(
                             Message(s, ds, k, d, level=sched_lvl))
@@ -339,8 +364,6 @@ def discover(ptg: PTG, seeds: Sequence[K], n_shards: int, *,
         raise ValueError(
             f"{len(leftover)} task(s) never became ready (unreachable deps or "
             f"wrong indegree), e.g. {leftover[:3]}")
-    if validate:
-        ptg.check_consistency(list(level_of))
     sched = WavefrontSchedule(n_shards, shards, dict(messages), level_of)
     # normalize: same number of wavefronts everywhere (lockstep lowering)
     depth = sched.n_wavefronts
@@ -348,3 +371,83 @@ def discover(ptg: PTG, seeds: Sequence[K], n_shards: int, *,
         while len(s.wavefronts) < depth:
             s.wavefronts.append([])
     return sched
+
+
+def discover(ptg: PTG, seeds: Sequence[K], n_shards: int, *,
+             validate: bool = False) -> WavefrontSchedule:
+    """Message-driven parallel discovery (run symbolically, shard-local)
+    from a *global* PTG — every shard expands through the same edge oracle.
+
+    Implemented as a bulk-synchronous emulation of the asynchronous runtime:
+    at each round every shard independently expands the ready tasks it owns,
+    posting discovery messages for remote out-edges; messages are delivered
+    between rounds. Wavefront level(k) = 1 + max(level of deps) — the ALAP/
+    ASAP leveling the lockstep lowering needs. Returns the
+    :class:`WavefrontSchedule`; raises ``ValueError`` when tasks never
+    become ready (wrong indegree / unreachable deps).
+
+    ``validate=True`` additionally runs :meth:`PTG.check_consistency` over
+    every discovered task, so hand-written in/out-edge pairs get the same
+    mutual-inverse guarantee the :mod:`repro.ptg` builder provides by
+    construction.
+    """
+    sched = _run_discovery(lambda s: ptg,
+                           [(k, ptg.mapping(k)) for k in seeds], n_shards)
+    if validate:
+        ptg.check_consistency(list(sched.level_of))
+    return sched
+
+
+def discover_local(views: Sequence, n_shards: int, *,
+                   validate: bool = False) -> WavefrontSchedule:
+    """The ``local=True`` discovery mode: the same message-driven loop as
+    :func:`discover`, but shard ``s`` expands through ``views[s]`` — a
+    lazily derived per-shard slice of the PTG
+    (:meth:`repro.ptg.Graph.derive_local`) that holds edges only for the
+    tasks the shard owns plus their halo. No global edge dicts exist at any
+    point; the union of what the views store is O(sum of owned + halo), and
+    each shard's expansion cost is O(its tasks + halo edges).
+
+    ``views[s]`` must expose ``in_deps`` / ``out_deps`` (complete for the
+    shard's owned tasks), ``mapping`` (owned *and* halo tasks — out-edge
+    targets are routed by the producer's view), ``seeds`` (owned
+    zero-indegree tasks in program order), and ``shard``.
+
+    Invariant (asserted by ``tests/test_lazy_discovery.py``): the returned
+    schedule — per-shard wavefronts, levels, and fused message plans — is
+    identical to ``discover`` over the eagerly derived global PTG.
+
+    ``validate=True`` runs :meth:`PTG.check_consistency` over every
+    discovered task through the :func:`union_ptg` of the views (the
+    cross-shard dispatch needed to follow an edge to its other endpoint).
+    """
+    seed_pairs = [(k, view.shard) for view in views for k in view.seeds]
+    sched = _run_discovery(lambda s: views[s], seed_pairs, n_shards)
+    if validate:
+        union_ptg(views).check_consistency(list(sched.level_of))
+    return sched
+
+
+def union_ptg(views: Sequence, home: Optional[Dict[K, object]] = None
+              ) -> PTG:
+    """A PTG-protocol facade over per-shard lazy views: each query is
+    dispatched to the view *owning* the task, so the union behaves exactly
+    like the eagerly derived global PTG without any shard's edge dicts
+    being merged. The dispatch table is O(n_tasks) keys (comparable to the
+    slot maps every lowering builds anyway) — the avoided global state is
+    the O(n_edges) in/out dicts; pass a prebuilt ``home`` (task -> owning
+    view) to share one table between callers. Raises ``KeyError`` for
+    unknown tasks."""
+    if home is None:
+        home = {k: v for v in views for k in v.tasks}
+
+    def _view(k: K):
+        try:
+            return home[k]
+        except KeyError:
+            raise KeyError(f"task {k!r} is owned by no shard view")
+
+    return PTG(in_deps=lambda k: _view(k).in_deps(k),
+               out_deps=lambda k: _view(k).out_deps(k),
+               mapping=lambda k: _view(k).mapping(k),
+               type_of=lambda k: _view(k).type_of(k))

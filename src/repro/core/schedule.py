@@ -63,7 +63,7 @@ except ImportError:  # pragma: no cover — older jax keeps it experimental
     from jax.experimental.shard_map import shard_map
 
 from .discovery import (PTG, CommPattern, WavefrontSchedule, discover,
-                        segment_runs)
+                        discover_local, segment_runs)
 
 logger = logging.getLogger(__name__)
 
@@ -97,7 +97,17 @@ class SparseRound:
 
 @dataclass(frozen=True)
 class BlockPTGSpec:
-    """Application -> executor contract for a block-structured PTG."""
+    """Application -> executor contract for a block-structured PTG.
+
+    ``ptg`` answers the edge/mapping queries; ``seeds`` are the
+    zero-indegree roots in program order; ``block_of`` / ``operands`` /
+    ``owner`` tie tasks to the block store. When ``views`` is set (one
+    lazily derived per-shard view, ``repro.ptg.Graph.local_views``),
+    discovery runs in local mode (:func:`~repro.core.discovery
+    .discover_local`) and the other callables are expected to dispatch
+    into the views — no global edge dicts exist anywhere in the lowering.
+    Invariant: a spec with and without ``views`` over the same graph lowers
+    to the identical program."""
 
     ptg: PTG
     seeds: Sequence[K]
@@ -107,6 +117,7 @@ class BlockPTGSpec:
     operands: Callable[[K], Sequence[B]]  # blocks read by k (fixed arity per type)
     owner: Callable[[B], int]             # shard owning block b
     dtype: object = jnp.float32
+    views: Optional[Sequence] = None      # per-shard lazy views (local mode)
 
 
 @dataclass
@@ -141,10 +152,15 @@ class BlockProgram:
 
     @property
     def trash(self) -> int:
+        """The padding slot (always the last): padded gathers read it,
+        padded writes and padded message arrivals land in it — real slots
+        are never aliased with it, so garbage cannot contaminate results."""
         return self.n_slots - 1
 
     def pack(self, blocks: Dict[B, np.ndarray]) -> np.ndarray:
-        """Host layout: {block id: array} -> [n_shards, n_slots, b0, b1]."""
+        """Host layout: {block id: array} -> [n_shards, n_slots, b0, b1],
+        each block placed at its owner's slot (``slot_of``); unset slots —
+        halo copies, trash — are zero. Inverse of :meth:`unpack`."""
         b0, b1 = self.spec.block_shape
         out = np.zeros((self.spec.n_shards, self.n_slots, b0, b1),
                        dtype=np.dtype(jnp.dtype(self.spec.dtype)))
@@ -154,6 +170,8 @@ class BlockProgram:
         return out
 
     def unpack(self, packed) -> Dict[B, np.ndarray]:
+        """Gather every block's *owned* copy back out of the packed
+        [n_shards, n_slots, b0, b1] array (halo copies are ignored)."""
         packed = np.asarray(packed)
         return {blk: packed[s, slot] for blk, (s, slot) in self.slot_of.items()}
 
@@ -858,12 +876,22 @@ def build_block_program(spec: BlockPTGSpec, *,
                         validate: bool = False) -> BlockProgram:
     """Discover the schedule and build all index tables (host side, numpy).
 
+    When ``spec.views`` is set (the lazy per-shard derivation,
+    ``repro.ptg.Graph.to_block_spec(lazy=True)``), discovery runs in local
+    mode: shard ``s`` expands through ``views[s]`` only, and every later
+    per-task query dispatches to the owning shard's view — the schedule and
+    all lowered tables are built from the union of per-shard views without
+    the global edge dicts ever existing.
+
     ``validate=True`` additionally runs ``PTG.check_consistency`` over every
     discovered task (mutual-inverse in/out edges + mapping stability) —
     recommended for hand-written specs; :mod:`repro.ptg` graphs carry the
     guarantee by construction."""
     ptg, n = spec.ptg, spec.n_shards
-    sched = discover(ptg, spec.seeds, n, validate=validate)
+    if spec.views is not None:
+        sched = discover_local(spec.views, n, validate=validate)
+    else:
+        sched = discover(ptg, spec.seeds, n, validate=validate)
     sched.validate(ptg)
 
     # --- slot assignment: owned blocks first, then halo copies, then trash.

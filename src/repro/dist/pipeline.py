@@ -63,10 +63,12 @@ def pipeline_ptg(n_stages: int, n_micro: int) -> PTG:
 
 
 def pipeline_schedule(n_stages: int, n_micro: int) -> WavefrontSchedule:
-    """Discover + level the pipeline PTG (one shard per stage). Validation
-    is on: the builder guarantees mutual-inverse edges by construction, and
-    ``check_consistency`` re-asserts it over every discovered task (cheap at
-    stage-graph sizes)."""
+    """Discover + level the pipeline PTG (one shard per stage), through the
+    default lazy per-shard derivation — each stage derives only its own
+    (s, m) tasks plus the neighbor hand-offs, never the full trapezoid.
+    Validation is on: the builder guarantees mutual-inverse edges by
+    construction, and ``check_consistency`` re-asserts it over every
+    discovered task (cheap at stage-graph sizes)."""
     return pipeline_graph(n_stages, n_micro).to_schedule(validate=True)
 
 

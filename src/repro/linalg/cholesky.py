@@ -72,8 +72,10 @@ def cholesky_graph(nb: int, pr: int, pc: int, b: int,
 
 
 def cholesky_spec(nb: int, pr: int, pc: int, b: int,
-                  dtype=jnp.float32) -> BlockPTGSpec:
-    return cholesky_graph(nb, pr, pc, b, dtype=dtype).to_block_spec()
+                  dtype=jnp.float32, *, lazy: bool = True) -> BlockPTGSpec:
+    """Spec via lazy per-shard derivation by default; ``lazy=False`` is the
+    eager global-scan oracle (identical program either way)."""
+    return cholesky_graph(nb, pr, pc, b, dtype=dtype).to_block_spec(lazy=lazy)
 
 
 def cholesky_program(nb: int, pr: int, pc: int, b: int,

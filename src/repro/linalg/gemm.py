@@ -69,9 +69,11 @@ def gemm_2d_graph(nb: int, pr: int, pc: int, b: int, *, staged: bool = False,
 
 
 def gemm_2d_spec(nb: int, pr: int, pc: int, b: int, *, staged: bool = False,
-                 dtype=jnp.float32) -> BlockPTGSpec:
+                 dtype=jnp.float32, lazy: bool = True) -> BlockPTGSpec:
+    """Spec via lazy per-shard derivation by default; ``lazy=False`` is the
+    eager global-scan oracle (identical program either way)."""
     return gemm_2d_graph(nb, pr, pc, b, staged=staged,
-                         dtype=dtype).to_block_spec()
+                         dtype=dtype).to_block_spec(lazy=lazy)
 
 
 # ------------------------------------------------------------- 3D mapping
@@ -135,8 +137,9 @@ def gemm_3d_graph(nb: int, q: int, b: int, *, dtype=jnp.float32) -> Graph:
     return g
 
 
-def gemm_3d_spec(nb: int, q: int, b: int, *, dtype=jnp.float32) -> BlockPTGSpec:
-    return gemm_3d_graph(nb, q, b, dtype=dtype).to_block_spec()
+def gemm_3d_spec(nb: int, q: int, b: int, *, dtype=jnp.float32,
+                 lazy: bool = True) -> BlockPTGSpec:
+    return gemm_3d_graph(nb, q, b, dtype=dtype).to_block_spec(lazy=lazy)
 
 
 # --------------------------------------------------- program + executor

@@ -10,10 +10,13 @@ property guaranteed by construction, and the same :class:`Graph` lowers to
 - the **compiled executor** (``Graph.to_block_spec`` / ``Graph.to_program``:
   parallel discovery -> wavefront schedule -> shard_map lowering).
 
-See ``src/repro/ptg/graph.py`` for the model and README's "Declaring a
-PTG" for the migration guide.
+Derivation itself is distributed by default: ``Graph.derive_local`` gives
+each shard its own lazily derived slice (owned tasks + halo only), so no
+rank ever materializes the global edge dicts — ``Graph.build`` remains the
+eager oracle. See docs/ptg_guide.md for the full guide and
+docs/architecture.md for the pipeline.
 """
 
-from .graph import Graph, TaskType, checked_ptg
+from .graph import Graph, LocalView, TaskType, checked_ptg
 
-__all__ = ["Graph", "TaskType", "checked_ptg"]
+__all__ = ["Graph", "LocalView", "TaskType", "checked_ptg"]

@@ -17,14 +17,25 @@ arXiv 2308.15964):
   a task runs on the shard owning the block it writes).
 
 Dependency derivation runs the classic sequential-semantics access scan
-(RAW / WAR / WAW hazards over the program order) across the enumerated
-index space, recording every edge **from both ends at once** — so
-``in_deps`` and ``out_deps`` are mutual inverses *by construction*, and
-``indegree``, ``operands``, ``block_of``, and the seed set all fall out of
-the same declarations. The derived edge functions reproduce the
-hand-written specs of every app in this repo exactly (task-for-task,
-edge-for-edge, order-for-order — asserted by ``tests/test_ptg_builder.py``
-against frozen legacy copies).
+(RAW / WAR / WAW hazards over the program order), recording every edge
+**from both ends at once** — so ``in_deps`` and ``out_deps`` are mutual
+inverses *by construction*, and ``indegree``, ``operands``, ``block_of``,
+and the seed set all fall out of the same declarations. The derived edge
+functions reproduce the hand-written specs of every app in this repo
+exactly (task-for-task, edge-for-edge, order-for-order — asserted by
+``tests/test_ptg_builder.py`` against frozen legacy copies).
+
+Derivation comes in two flavors:
+
+- **lazy per-shard** (:meth:`Graph.derive_local`, the default lowering
+  path): each shard derives edges only for its *owned tasks + halo* — the
+  frontier one ``reads``/``writes`` overlap away — so no rank ever
+  materializes the global edge dicts, matching the paper's claim that the
+  DAG is "completely distributed and discovered in parallel";
+- **eager global** (:meth:`Graph.build`): the full scan over the whole
+  index space, kept as the statically queryable form and as the validation
+  oracle the lazy path is proven edge-for-edge identical to
+  (``tests/test_lazy_discovery.py``).
 
 One ``Graph`` then lowers to **both** back-ends:
 
@@ -48,10 +59,87 @@ from typing import (Callable, Dict, Hashable, Iterable, List, Optional,
 
 import jax.numpy as jnp
 
-from repro.core.discovery import PTG, WavefrontSchedule, discover
+from repro.core.discovery import (PTG, WavefrontSchedule, discover,
+                                  discover_local, union_ptg)
 
 K = Hashable  # task key (as the app knows it, e.g. ("gemm", i, k, j))
 B = Hashable  # block id
+
+
+class LocalView:
+    """One shard's lazily derived slice of a :class:`Graph`'s PTG.
+
+    Produced by :meth:`Graph.derive_local`: edge dicts exist **only** for
+    the tasks this shard owns; remote tasks appear solely as keys inside
+    those edge lists (plus their ``mapping``, so discovery can route
+    fulfillments without asking any other shard). Invariant, asserted by
+    ``tests/test_lazy_discovery.py``: for every owned task the stored
+    ``in_deps`` / ``out_deps`` / ``operands`` / ``block_of`` / ``type_of``
+    / ``mapping`` are value- and order-identical to what the eager
+    :meth:`Graph.build` derives for that task.
+
+    ``stats`` quantifies the laziness (what `benchmarks/discovery_scaling`
+    tracks): ``n_owned`` / ``n_halo`` scanned tasks, ``derived_edges``
+    (edge-list entries stored — the peak, since derivation only appends),
+    ``n_relevant_blocks`` (blocks whose access state was tracked), and
+    ``n_tasks_global`` (index-space size, for the ratio columns).
+    """
+
+    def __init__(self, graph_name: str, shard: int, n_shards: int):
+        self.graph_name = graph_name
+        self.shard = shard
+        self.n_shards = n_shards
+        self.tasks: List[K] = []     # owned tasks, program order
+        self.seeds: List[K] = []     # owned zero-indegree tasks, program order
+        self.pos: Dict[K, int] = {}  # owned task -> global program position
+        self.stats: Dict[str, int] = {}
+        self._in: Dict[K, List[K]] = {}
+        self._out: Dict[K, List[K]] = {}
+        self._operands: Dict[K, List[B]] = {}
+        self._block: Dict[K, B] = {}
+        self._type: Dict[K, str] = {}
+        self._map: Dict[K, int] = {}  # owned AND halo tasks
+
+    def _get(self, table: Dict[K, object], k: K, what: str):
+        try:
+            return table[k]
+        except KeyError:
+            raise KeyError(
+                f"task {k!r}: no {what} on shard {self.shard} of graph "
+                f"{self.graph_name!r} (not an owned task of this view)")
+
+    def in_deps(self, k: K) -> Sequence[K]:
+        """Dependencies of owned task ``k`` (same order as the eager scan:
+        RAW in operand order, WAR, WAW, then ``after`` control edges)."""
+        return self._get(self._in, k, "in_deps")
+
+    def out_deps(self, k: K) -> Sequence[K]:
+        """Consumers owned task ``k`` fulfills (data consumers in program
+        order, then control consumers) — may include remote tasks."""
+        return self._get(self._out, k, "out_deps")
+
+    def operands(self, k: K) -> Sequence[B]:
+        """Blocks owned task ``k`` reads, in compute-body operand order."""
+        return self._get(self._operands, k, "operands")
+
+    def block_of(self, k: K) -> B:
+        """The single block owned task ``k`` writes."""
+        return self._get(self._block, k, "block_of")
+
+    def type_of(self, k: K) -> str:
+        """Task-type name of owned task ``k``."""
+        return self._get(self._type, k, "type_of")
+
+    def mapping(self, k: K) -> int:
+        """Shard of ``k`` — defined for owned tasks *and* the halo tasks
+        appearing in this view's edge lists (out-edge routing needs it)."""
+        return self._get(self._map, k, "mapping")
+
+    def __repr__(self) -> str:
+        return (f"LocalView({self.graph_name!r}, shard={self.shard}, "
+                f"{len(self.tasks)} owned, "
+                f"{self.stats.get('n_halo', 0)} halo, "
+                f"{self.stats.get('derived_edges', 0)} edges)")
 
 
 class TaskType:
@@ -93,11 +181,16 @@ class TaskType:
 class Graph:
     """Declarative PTG: register task types, then lower to either back-end.
 
-    The graph is finalized lazily (first query or lowering triggers
-    :meth:`build`); after that the derived ``in_deps`` / ``out_deps`` /
-    ``operands`` / ``block_of`` / ``mapping`` / ``type_of`` behave as the
-    pure functions the ``PTG`` contract expects, and ``seeds`` holds the
-    zero-indegree tasks in program order.
+    Lowerings (:meth:`to_block_spec` / :meth:`to_schedule` /
+    :meth:`to_program` / :meth:`run_host`) derive the graph **lazily per
+    shard** by default (:meth:`derive_local`: owned tasks + halo only —
+    the global edge dicts are never materialized). Static queries
+    (``tasks``, ``seeds``, ``in_deps(k)``, ...) trigger the eager global
+    :meth:`build` instead; after it the derived ``in_deps`` / ``out_deps``
+    / ``operands`` / ``block_of`` / ``mapping`` / ``type_of`` behave as
+    the pure functions the ``PTG`` contract expects, and ``seeds`` holds
+    the zero-indegree tasks in program order. Invariant: both derivations
+    agree edge-for-edge (``tests/test_lazy_discovery.py``).
     """
 
     def __init__(self, name: str, *, n_shards: int,
@@ -112,13 +205,14 @@ class Graph:
         self._types: Dict[str, TaskType] = {}
         self._sequence: Optional[Callable[[], Iterable[Tuple]]] = None
         self._built = False
+        self._derived = False  # any derive_local ran -> declarations frozen
+        self._views: Optional[List[LocalView]] = None  # default-owner cache
 
     # ------------------------------------------------------- declaration
 
     def task_type(self, name: str, **kwargs) -> TaskType:
         """Register a task family (see :class:`TaskType` for the fields)."""
-        if self._built:
-            raise RuntimeError(f"graph {self.name!r} is already built")
+        self._check_mutable()
         if name in self._types:
             raise ValueError(f"task type {name!r} already registered")
         t = TaskType(name, **kwargs)
@@ -131,9 +225,20 @@ class Graph:
         interleave for sequential semantics (Cholesky's per-panel potrf /
         trsm / update rounds, Task-Bench's layer order); without it, types
         enumerate whole in registration order."""
+        self._check_mutable()
+        self._sequence = program
+
+    def _check_mutable(self) -> None:
+        """Declarations freeze at the first derivation — eager build OR any
+        lazy per-shard derive — so no lowering can ever see stale edges
+        (the lazy view cache would otherwise silently drop later
+        declarations)."""
         if self._built:
             raise RuntimeError(f"graph {self.name!r} is already built")
-        self._sequence = program
+        if self._derived:
+            raise RuntimeError(
+                f"graph {self.name!r} is already derived (a lowering or "
+                "derive_local ran); declare every task type first")
 
     def _program_iter(self) -> Iterable[Tuple[TaskType, Tuple]]:
         if self._sequence is not None:
@@ -236,6 +341,164 @@ class Graph:
         self._built = True
         return self
 
+    # ------------------------------------------- lazy per-shard derivation
+
+    def derive_local(self, shard: int,
+                     owner_map: Optional[Callable[[B], int]] = None
+                     ) -> LocalView:
+        """Derive ``shard``'s slice of the PTG without building the global
+        graph: the same sequential-semantics access scan as :meth:`build`,
+        but with per-block state (last writer, readers-since-write) and
+        edge lists materialized **only** for the shard's owned tasks plus
+        their halo — the frontier reachable through one ``reads``/``writes``
+        overlap. Peak derived state is O(owned + halo), never O(global
+        edges); this is the paper's "the DAG is discovered piece by piece,
+        in parallel" applied to derivation itself.
+
+        ``owner_map`` overrides the graph's ``owner`` for this derivation
+        (e.g. a rebalanced or ragged block distribution); tasks without an
+        explicit ``TaskType.mapping`` follow it. Returns a
+        :class:`LocalView`; feed one view per shard to
+        :func:`repro.core.discovery.discover_local` (what
+        :meth:`to_schedule` / :meth:`to_block_spec` do by default).
+
+        Why two passes: the halo block set (blocks owned tasks read) must
+        be known *before* the scan — a halo block's last writer may precede
+        the owned reader in program order, and a single pass would have
+        skipped it. Pass 1 therefore evaluates only ``writes`` globally
+        (+ ``reads`` for owned tasks) to fix the relevant-block set; pass 2
+        runs the restricted scan. Correctness of the restriction: every
+        edge incident to an owned task flows through a block that is
+        relevant here (the task's written block, a block it reads, or an
+        owned block a remote task touches), and no owned task ever touches
+        an irrelevant block — so the per-block state trajectories, and
+        hence the derived edges, match the global scan exactly.
+        """
+        owner = owner_map if owner_map is not None else self.owner
+        n = self.n_shards
+        self._derived = True  # freeze declarations (see _check_mutable)
+
+        # ---- pass 1: owned task keys + the halo/override block set
+        owned_keys: set = set()
+        extra_blocks: set = set()   # halo blocks + override-written blocks
+        n_global = 0
+        for t, idx in self._program_iter():
+            n_global += 1
+            blk_w = t.writes(*idx)
+            t_shard = (t.mapping(*idx) if t.mapping is not None
+                       else owner(blk_w)) % n
+            if t_shard != shard:
+                continue
+            owned_keys.add(t.key_of(idx))
+            extra_blocks.add(blk_w)  # covers mapping-override ownership
+            if t.reads is not None:
+                extra_blocks.update(t.reads(*idx))
+
+        def rel(blk: B) -> bool:
+            return blk in extra_blocks or owner(blk) % n == shard
+
+        # ---- pass 2: restricted access scan (mirrors build() exactly on
+        # the relevant-block subspace)
+        view = LocalView(self.name, shard, n)
+        last_writer: Dict[B, K] = {}
+        readers: Dict[B, List[K]] = {}
+        out_data: Dict[K, List[K]] = {}
+        out_after: Dict[K, List[K]] = {}
+        scanned: set = set()
+        derived_edges = 0
+
+        for pos, (t, idx) in enumerate(self._program_iter()):
+            k = t.key_of(idx)
+            owned = k in owned_keys
+            blk_w = t.writes(*idx)
+            rds = list(t.reads(*idx)) if t.reads is not None else []
+            afters = (list(t.after(*idx)) if t.after is not None else [])
+            if not owned and not (
+                    rel(blk_w) or any(rel(b) for b in rds)
+                    or any(d in owned_keys for d in afters)):
+                continue
+            if k in scanned:
+                raise ValueError(f"duplicate task key {k!r}")
+            scanned.add(k)
+
+            deps: List[K] = []
+            seen = {k}                           # never self-depend
+
+            def _add(d):
+                if d is not None and d not in seen:
+                    seen.add(d)
+                    deps.append(d)
+            for blk in rds:                      # RAW, in operand order
+                _add(last_writer.get(blk))
+            for r in readers.get(blk_w, ()):     # WAR
+                _add(r)
+            _add(last_writer.get(blk_w))         # WAW
+            for d in deps:
+                if d in owned_keys:
+                    out_data.setdefault(d, []).append(k)
+
+            for d in afters:
+                if d in owned_keys and d not in scanned:
+                    raise ValueError(
+                        f"task {k!r}: after-edge {d!r} does not name an "
+                        "earlier task (sequential semantics require "
+                        "control edges to point backwards)")
+                if d not in seen:
+                    seen.add(d)
+                    deps.append(d)
+                    if d in owned_keys:
+                        out_after.setdefault(d, []).append(k)
+
+            t_shard = (t.mapping(*idx) if t.mapping is not None
+                       else owner(blk_w))
+            view._map[k] = t_shard               # owned AND halo routing
+            if owned:
+                view._in[k] = deps
+                derived_edges += len(deps)
+                view._operands[k] = rds
+                view._block[k] = blk_w
+                view._type[k] = t.name
+                view.pos[k] = pos
+                view.tasks.append(k)
+
+            if rel(blk_w):
+                last_writer[blk_w] = k
+                readers[blk_w] = [k] if blk_w in rds else []
+            for blk in rds:
+                if blk != blk_w and rel(blk):
+                    readers.setdefault(blk, []).append(k)
+
+        # data consumers first (program order), then control consumers —
+        # the same convention as build()
+        for k in view.tasks:
+            out = out_data.get(k, []) + out_after.get(k, [])
+            view._out[k] = out
+            derived_edges += len(out)
+        view.seeds = [k for k in view.tasks if not view._in[k]]
+        view.stats = {
+            "n_owned": len(view.tasks),
+            "n_halo": len(scanned) - len(view.tasks),
+            "n_tasks_global": n_global,
+            "derived_edges": derived_edges,
+            "n_relevant_blocks": len(set(last_writer) | set(readers)),
+        }
+        return view
+
+    def local_views(self, owner_map: Optional[Callable[[B], int]] = None
+                    ) -> List[LocalView]:
+        """One :class:`LocalView` per shard (:meth:`derive_local` for every
+        shard; the default-owner result is cached). On a real distributed
+        system each rank would derive only its own view — deriving all of
+        them here is the single-host emulation of that, and the per-view
+        ``stats`` are what the distributed ranks would each pay."""
+        if owner_map is not None:
+            return [self.derive_local(s, owner_map)
+                    for s in range(self.n_shards)]
+        if self._views is None:
+            self._views = [self.derive_local(s)
+                           for s in range(self.n_shards)]
+        return self._views
+
     # ---------------------------------------------------- derived queries
 
     def _get(self, table: str, k: K):
@@ -246,24 +509,34 @@ class Graph:
             raise KeyError(f"unknown task {k!r} in graph {self.name!r}")
 
     def in_deps(self, k: K) -> Sequence[K]:
+        """Tasks ``k`` depends on — RAW in operand order, then WAR, WAW,
+        and ``after`` control edges (mutual inverse of :meth:`out_deps`)."""
         return self._get("_in", k)
 
     def out_deps(self, k: K) -> Sequence[K]:
+        """Tasks whose promises ``k`` fulfills — data consumers in program
+        order, then control consumers (mutual inverse of :meth:`in_deps`)."""
         return self._get("_out", k)
 
     def operands(self, k: K) -> Sequence[B]:
+        """Blocks ``k`` reads, in the compute body's operand order."""
         return self._get("_operands", k)
 
     def block_of(self, k: K) -> B:
+        """The single block ``k`` writes ("owner computes" anchor)."""
         return self._get("_block", k)
 
     def type_of(self, k: K) -> str:
+        """Name of the :class:`TaskType` that declared ``k``."""
         return self._get("_type", k)
 
     def mapping(self, k: K) -> int:
+        """Shard ``k`` runs on: its ``TaskType.mapping`` override, else the
+        owner of the block it writes."""
         return self._get("_map", k)
 
     def indegree(self, k: K) -> int:
+        """``len(in_deps(k))`` — the promise count the runtime counts down."""
         return len(self._get("_in", k))
 
     @property
@@ -292,27 +565,62 @@ class Graph:
                    mapping=self.mapping, type_of=self.type_of)
 
     def to_block_spec(self, *, block_shape: Optional[Tuple[int, int]] = None,
-                      dtype=None):
+                      dtype=None, lazy: bool = True):
         """Lower to the compiled layer's application contract
         (:class:`~repro.core.schedule.BlockPTGSpec`) — feed it to
         ``build_block_program`` / ``run_host_ptg`` exactly like a
-        hand-written spec."""
+        hand-written spec.
+
+        ``lazy=True`` (the default) derives one :class:`LocalView` per
+        shard (:meth:`derive_local`) instead of building the global edge
+        dicts: the spec's ``ptg`` / ``operands`` / ``block_of`` dispatch
+        every query to the owning shard's view, its ``seeds`` are the
+        per-view seeds merged back into global program order, and
+        ``spec.views`` routes ``build_block_program`` through
+        :func:`~repro.core.discovery.discover_local`. ``lazy=False`` keeps
+        the eager global derivation — the validation oracle the lazy path
+        is tested against (edge-for-edge, ``tests/test_lazy_discovery.py``).
+        """
         from repro.core.schedule import BlockPTGSpec
 
-        self.build()
-        return BlockPTGSpec(
-            ptg=self.to_ptg(), seeds=self.seeds, n_shards=self.n_shards,
-            block_shape=block_shape or self.block_shape,
-            block_of=self.block_of, operands=self.operands,
-            owner=self.owner, dtype=dtype or self.dtype)
+        if not lazy:
+            self.build()
+            return BlockPTGSpec(
+                ptg=self.to_ptg(), seeds=self.seeds, n_shards=self.n_shards,
+                block_shape=block_shape or self.block_shape,
+                block_of=self.block_of, operands=self.operands,
+                owner=self.owner, dtype=dtype or self.dtype)
 
-    def to_program(self, *, validate: bool = False):
+        views = self.local_views()
+        home: Dict[K, LocalView] = {k: v for v in views for k in v.tasks}
+
+        def _view(k: K) -> LocalView:
+            try:
+                return home[k]
+            except KeyError:
+                raise KeyError(f"unknown task {k!r} in graph {self.name!r}")
+
+        ptg = union_ptg(views, home=home)
+        seeds = [k for _, k in sorted(
+            ((v.pos[k], k) for v in views for k in v.seeds),
+            key=lambda e: e[0])]
+        return BlockPTGSpec(
+            ptg=ptg, seeds=seeds, n_shards=self.n_shards,
+            block_shape=block_shape or self.block_shape,
+            block_of=lambda k: _view(k).block_of(k),
+            operands=lambda k: _view(k).operands(k),
+            owner=self.owner, dtype=dtype or self.dtype, views=views)
+
+    def to_program(self, *, validate: bool = False, lazy: bool = True):
         """Discover + lower to a :class:`~repro.core.schedule.BlockProgram`
         (per-wavefront tables + classified comm plan), ready for
-        ``auto_executor``."""
+        ``auto_executor``. ``lazy`` selects the derivation
+        (:meth:`to_block_spec`); the resulting program is identical either
+        way."""
         from repro.core.schedule import build_block_program
 
-        return build_block_program(self.to_block_spec(), validate=validate)
+        return build_block_program(self.to_block_spec(lazy=lazy),
+                                   validate=validate)
 
     def executor(self, bodies, mesh, axis: str = "shards", *,
                  validate: bool = False, **policy):
@@ -327,8 +635,15 @@ class Graph:
         return self.to_program(validate=validate).auto_executor(
             bodies, mesh, axis, **policy)
 
-    def to_schedule(self, *, validate: bool = False) -> WavefrontSchedule:
-        """Just the parallel-discovery schedule (wavefronts + comm plan)."""
+    def to_schedule(self, *, validate: bool = False,
+                    lazy: bool = True) -> WavefrontSchedule:
+        """Just the parallel-discovery schedule (wavefronts + comm plan).
+        ``lazy=True`` (default) discovers through per-shard
+        :class:`LocalView`'s (``discover_local``); ``lazy=False`` through
+        the eagerly built global PTG — identical schedules either way."""
+        if lazy:
+            return discover_local(self.local_views(), self.n_shards,
+                                  validate=validate)
         self.build()
         return discover(self.to_ptg(), self.seeds, self.n_shards,
                         validate=validate)

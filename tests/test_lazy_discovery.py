@@ -1,0 +1,275 @@
+"""Lazy per-shard derivation is edge-for-edge identical to the eager scan.
+
+The acceptance bar of the distributed-discovery redesign: for every app
+graph family, ``Graph.derive_local`` (owned tasks + halo only) unioned
+across shards must reproduce *exactly* what the eager global access scan
+(``Graph.build``) derives — same edges, same order, same seeds — and the
+``discover_local`` schedule plus the full lowered program must match the
+eager path array-for-array. The eager path is kept precisely to be this
+oracle (``to_block_spec(lazy=False)``).
+
+Also covered: per-shard locality of the derived state (edges scale with
+owned + halo, not the global index space), ragged owner maps (hypothesis:
+random skewed block distributions, including shards owning nothing),
+``derive_local(shard, owner_map=...)`` overrides, and the local error
+surface (non-owned queries, duplicate keys, forward after-edges).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core.discovery import discover_local, union_ptg
+from repro.core.schedule import build_block_program
+from repro.dist.pipeline import pipeline_graph
+from repro.linalg.cholesky import cholesky_graph, cholesky_spec
+from repro.linalg.gemm import (gemm_2d_graph, gemm_2d_spec, gemm_3d_graph,
+                               gemm_3d_spec)
+from repro.ptg import Graph
+from benchmarks.taskbench_scaling import taskbench_graph, taskbench_spec
+
+from tests.test_ptg_builder import (assert_programs_identical,
+                                    assert_schedules_identical)
+
+
+def assert_views_match_eager(make_graph):
+    """The core identity: per-shard lazy views, unioned, equal the eager
+    global derivation edge-for-edge (values AND order), task-for-task."""
+    eager = make_graph().build()
+    lazy = make_graph()
+    views = lazy.local_views()
+
+    all_owned = [k for v in views for k in v.tasks]
+    assert sorted(map(repr, all_owned)) == sorted(map(repr, eager.tasks))
+    assert len(all_owned) == eager.n_tasks  # disjoint ownership
+
+    for v in views:
+        for k in v.tasks:
+            assert v.in_deps(k) == eager.in_deps(k), k
+            assert v.out_deps(k) == eager.out_deps(k), k
+            assert v.operands(k) == eager.operands(k), k
+            assert v.block_of(k) == eager.block_of(k), k
+            assert v.type_of(k) == eager.type_of(k), k
+            assert v.mapping(k) == eager.mapping(k), k
+        # halo mapping agrees wherever it is defined
+        for k, m in v._map.items():
+            assert m == eager.mapping(k), k
+    return eager, views
+
+
+GRAPH_FAMILIES = {
+    "gemm2d": lambda: gemm_2d_graph(5, 2, 2, 4),
+    "gemm2d_staged": lambda: gemm_2d_graph(5, 2, 2, 4, staged=True),
+    "gemm3d": lambda: gemm_3d_graph(4, 2, 4),
+    "cholesky": lambda: cholesky_graph(6, 2, 2, 4),
+    "pipeline": lambda: pipeline_graph(4, 6),
+    "tb_stencil": lambda: taskbench_graph("stencil", 8, 6, 4, 4, fan=2)[0],
+    "tb_fft": lambda: taskbench_graph("fft", 8, 6, 4, 4, fan=2)[0],
+    "tb_tree": lambda: taskbench_graph("tree", 8, 6, 4, 4, fan=2)[0],
+    "tb_random": lambda: taskbench_graph("random", 8, 6, 4, 4, fan=2)[0],
+}
+
+
+@pytest.mark.parametrize("family", sorted(GRAPH_FAMILIES))
+def test_lazy_views_match_eager_per_family(family):
+    make = GRAPH_FAMILIES[family]
+    eager, views = assert_views_match_eager(make)
+    # seeds: merged per-view seeds reproduce the eager program order
+    merged = [k for _, k in sorted(((v.pos[k], k)
+                                    for v in views for k in v.seeds),
+                                   key=lambda e: e[0])]
+    assert merged == eager.seeds
+    # and the local-mode schedule equals global discovery
+    sn = make().to_schedule(validate=True, lazy=True)
+    so = make().to_schedule(validate=True, lazy=False)
+    assert_schedules_identical(sn, so)
+
+
+SPEC_FAMILIES = {
+    "gemm2d": lambda lazy: gemm_2d_spec(5, 2, 2, 4, lazy=lazy),
+    "gemm2d_staged": lambda lazy: gemm_2d_spec(5, 2, 2, 4, staged=True,
+                                               lazy=lazy),
+    "gemm3d": lambda lazy: gemm_3d_spec(4, 2, 4, lazy=lazy),
+    "cholesky": lambda lazy: cholesky_spec(6, 2, 2, 4, lazy=lazy),
+    "tb_stencil": lambda lazy: taskbench_spec("stencil", 8, 6, 4, 4,
+                                              fan=2, lazy=lazy)[0],
+    "tb_random": lambda lazy: taskbench_spec("random", 8, 6, 4, 4,
+                                             fan=2, lazy=lazy)[0],
+}
+
+
+@pytest.mark.parametrize("family", sorted(SPEC_FAMILIES))
+def test_lazy_program_identical_to_eager_per_family(family):
+    """Full lowered-program identity (schedule, slot maps, every index and
+    exchange table array-for-array): the executors emit identical HLO."""
+    make = SPEC_FAMILIES[family]
+    lazy_spec = make(True)
+    assert lazy_spec.views is not None and len(lazy_spec.views) == \
+        lazy_spec.n_shards
+    eager_spec = make(False)
+    assert eager_spec.views is None
+    assert_programs_identical(lazy_spec, eager_spec)
+
+
+# ------------------------------------------------------------- locality
+
+def test_derived_state_scales_with_owned_plus_halo():
+    """The point of the redesign: per-shard derived edges shrink as the
+    graph is spread over more shards, while the eager edge count (the
+    global graph) stays fixed."""
+    width, depth = 32, 8
+
+    def eager_edges(g):
+        g.build()
+        return sum(len(g.in_deps(k)) + len(g.out_deps(k)) for k in g.tasks)
+
+    totals = {}
+    peaks = {}
+    for n_shards in (2, 4, 8, 16):
+        g, _ = taskbench_graph("stencil", width, depth, n_shards, 4)
+        views = g.local_views()
+        peaks[n_shards] = max(v.stats["derived_edges"] for v in views)
+        ge, _ = taskbench_graph("stencil", width, depth, n_shards, 4)
+        totals[n_shards] = eager_edges(ge)
+        # owned+halo bound: a stencil shard's halo is its boundary columns
+        for v in views:
+            assert v.stats["n_halo"] <= 2 * depth + v.stats["n_owned"]
+            assert (v.stats["n_owned"] + v.stats["n_halo"]
+                    < v.stats["n_tasks_global"])
+    # the global graph does not depend on the shard count...
+    assert len(set(totals.values())) == 1
+    # ...but the per-shard derived state does, monotonically
+    assert peaks[16] < peaks[8] < peaks[4] < peaks[2] < totals[2]
+
+
+def test_view_rejects_non_owned_queries():
+    g = cholesky_graph(4, 2, 2, 4)
+    views = g.local_views()
+    foreign = views[1].tasks[0]
+    with pytest.raises(KeyError, match="not an owned task"):
+        views[0].in_deps(foreign)
+    with pytest.raises(KeyError, match="owned by no shard"):
+        g.to_block_spec().ptg.in_deps(("potrf", 99))   # == union_ptg(views)
+    with pytest.raises(KeyError, match="unknown task"):
+        g.to_block_spec().operands(("potrf", 99))
+    with pytest.raises(KeyError, match="owned by no shard"):
+        union_ptg(views).in_deps(("potrf", 99))
+
+
+def test_lazy_derivation_freezes_declarations():
+    """A lazy lowering must freeze the graph exactly like the eager build:
+    a task type declared afterwards would be silently absent from the
+    cached views otherwise."""
+    g = cholesky_graph(4, 2, 2, 4)
+    g.to_schedule()                       # lazy default: derives + caches
+    with pytest.raises(RuntimeError, match="already derived"):
+        g.task_type("late", writes=lambda i: ("x", i))
+    with pytest.raises(RuntimeError, match="already derived"):
+        g.sequence(lambda: [])
+
+
+def test_derive_local_error_surface():
+    g = Graph("dup", n_shards=1, owner=lambda blk: 0)
+    g.task_type("t", space=lambda: ((0,), (0,)), writes=lambda i: ("x", i))
+    with pytest.raises(ValueError, match="duplicate task key"):
+        g.derive_local(0)
+
+    g2 = Graph("fwd", n_shards=1, owner=lambda blk: 0)
+    g2.task_type("t", space=lambda: ((i,) for i in range(3)),
+                 writes=lambda i: ("x", i),
+                 after=lambda i: [("t", i + 1)] if i == 0 else [])
+    with pytest.raises(ValueError, match="earlier task"):
+        g2.derive_local(0)
+
+
+# ------------------------------------------------- ragged owner maps
+
+def _ragged_layered_graph(rng, n_layers, width, n_shards, fan_in,
+                          owner_of=None):
+    """Random layered graph with a random *ragged* block distribution:
+    shard weights drawn skewed, so some shards own most blocks and others
+    may own none — the worst case for any balance assumption in the
+    per-shard derivation."""
+    deps = {}
+    for l in range(1, n_layers):
+        for i in range(width):
+            srcs = sorted(set(int(rng.integers(0, width))
+                              for _ in range(fan_in)))
+            deps[(l, i)] = [(l - 1, j) for j in srcs]
+
+    if owner_of is None:
+        weights = rng.random(n_shards) ** 3 + 1e-9   # heavily skewed
+        weights /= weights.sum()
+        assign = {(l, i): int(rng.choice(n_shards, p=weights))
+                  for l in range(n_layers) for i in range(width)}
+        owner_of = assign.__getitem__
+
+    g = Graph("ragged", n_shards=n_shards, owner=owner_of,
+              block_shape=(4, 4))
+    for nfan in sorted({len(d) for d in deps.values()} | {0}):
+        g.task_type(f"f{nfan}",
+                    key=lambda l, i: (l, i),
+                    writes=lambda l, i: (l, i),
+                    reads=lambda l, i: [(l, i)] + deps.get((l, i), []))
+    g.sequence(lambda: ((f"f{len(deps.get((l, i), ()))}", l, i)
+                        for l in range(n_layers) for i in range(width)))
+    return g, owner_of
+
+
+@settings(deadline=None, max_examples=15,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n_layers=st.integers(2, 5),
+    width=st.integers(1, 6),
+    n_shards=st.integers(1, 5),
+    fan_in=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_lazy_matches_eager_on_ragged_owner_maps(n_layers, width, n_shards,
+                                                 fan_in, seed):
+    rng = np.random.default_rng(seed)
+    g_lazy, owner_of = _ragged_layered_graph(rng, n_layers, width, n_shards,
+                                             fan_in)
+    rng2 = np.random.default_rng(seed)
+    g_eager, _ = _ragged_layered_graph(rng2, n_layers, width, n_shards,
+                                       fan_in, owner_of=owner_of)
+    assert_views_match_eager(lambda: g_lazy)  # one-shot: graphs are stateful
+
+    # full program identity, lazy vs eager, on the ragged distribution
+    assert_programs_identical(g_lazy.to_block_spec(lazy=True),
+                              g_eager.to_block_spec(lazy=False))
+
+
+def test_derive_local_owner_map_override():
+    """derive_local(s, owner_map=O) on a graph declared with a different
+    owner equals derive_local(s) on a graph declared with O itself."""
+    rng = np.random.default_rng(7)
+    g_base, _ = _ragged_layered_graph(rng, 4, 5, 3, 2,
+                                      owner_of=lambda blk: 0)
+    ragged = {(l, i): (l * 5 + i) % 3 if i else 0
+              for l in range(4) for i in range(5)}
+    rng2 = np.random.default_rng(7)
+    g_ref, _ = _ragged_layered_graph(rng2, 4, 5, 3, 2,
+                                     owner_of=ragged.__getitem__)
+    for s in range(3):
+        vo = g_base.derive_local(s, owner_map=ragged.__getitem__)
+        vr = g_ref.derive_local(s)
+        assert vo.tasks == vr.tasks and vo.seeds == vr.seeds
+        for k in vo.tasks:
+            assert vo.in_deps(k) == vr.in_deps(k)
+            assert vo.out_deps(k) == vr.out_deps(k)
+            assert vo.mapping(k) == vr.mapping(k)
+
+
+def test_discover_local_handles_empty_shards():
+    """A shard owning nothing (fully ragged) yields an empty view; the
+    local-mode schedule still matches global discovery."""
+    rng = np.random.default_rng(3)
+    g, owner_of = _ragged_layered_graph(rng, 3, 4, 4, 2,
+                                        owner_of=lambda blk: blk[1] % 2)
+    views = g.local_views()
+    assert [len(v.tasks) for v in views[2:]] == [0, 0]
+    sched = discover_local(views, 4, validate=True)
+    rng2 = np.random.default_rng(3)
+    g2, _ = _ragged_layered_graph(rng2, 3, 4, 4, 2, owner_of=owner_of)
+    assert_schedules_identical(sched, g2.to_schedule(lazy=False))
