@@ -18,7 +18,11 @@ that moves more than ``--tol`` (default 20%) past its baseline fails the
 job; new cases (no baseline row) and timing rows (no metric) pass
 through. us-per-task and compile_seconds are deliberately NOT guarded:
 they are noisy on emulated-CPU CI, while wire efficiency and HLO-size
-ratios are deterministic properties of the lowering.
+ratios are deterministic properties of the lowering. The one timing
+metric that IS guarded — ``metg_us:lower``, the Task-Bench minimum
+effective task granularity — runs as a separate CI invocation at
+``--tol 1.0``: only an order-of-magnitude overhead regression (METG more
+than doubling) fails, which scheduler noise cannot produce.
 
     python benchmarks/check_regression.py BENCH_ci.json \
         --baseline BENCH_20260727.json \

@@ -22,7 +22,13 @@ per (pattern, width, depth, n_shards):
 - ``edges_per_owned_halo`` = lazy_edges_max / owned_halo_max — the
   scaling witness: it stays flat across shard counts and graph sizes
   while ``edge_frac`` falls, i.e. per-shard cost follows owned + halo,
-  not the global index space.
+  not the global index space;
+- ``pass1_scanned_max`` / ``pass1_frac`` — how many index-space entries
+  pass 1 (relevance filtering) touched on the worst shard, and that count
+  over the global task count. With typed partitionable index spaces
+  (``IndexSpace.enumerate_owned``) each shard enumerates only its own
+  strip, so ``pass1_frac`` falls ~1/S across the shard sweep; an opaque
+  space would pin it at 1.0 (the full-scan fallback).
 
 Two sweeps make that visible: ``shards`` grows the shard count at a fixed
 global graph (per-shard state must shrink ~1/S), and ``depth`` grows the
@@ -76,10 +82,13 @@ def _row(report, tag, pattern, width, depth, n_shards):
     lazy_e_max = max(st["derived_edges"] for _, st in per_shard)
     owned_halo = [st["n_owned"] + st["n_halo"] for _, st in per_shard]
     edge_frac = lazy_e_max / eager_e if eager_e else 0.0
+    pass1_max = max(st["pass1_scanned"] for _, st in per_shard)
+    pass1_frac = pass1_max / n_tasks
     report(
         f"discovery/{tag}/{pattern}/w{width}d{depth}s{n_shards}",
         lazy_s_max * 1e6,
-        f"edge_frac={edge_frac:.3f};lazy_edges_max={lazy_e_max};"
+        f"edge_frac={edge_frac:.3f};pass1_frac={pass1_frac:.3f};"
+        f"lazy_edges_max={lazy_e_max};"
         f"eager_edges={eager_e};owned_halo_max={max(owned_halo)}",
         extra={
             "pattern": pattern, "width": width, "depth": depth,
@@ -92,18 +101,27 @@ def _row(report, tag, pattern, width, depth, n_shards):
             "owned_halo_mean": sum(owned_halo) / len(owned_halo),
             "edge_frac": edge_frac,
             "edges_per_owned_halo": lazy_e_max / max(owned_halo),
+            "pass1_scanned_max": pass1_max,
+            "pass1_frac": pass1_frac,
         },
     )
-    return edge_frac
+    return edge_frac, pass1_frac
 
 
 def run(report) -> None:
     tag, pattern, width, depth, shard_counts = SHARD_SWEEP
-    fracs = [_row(report, tag, pattern, width, depth, s)
-             for s in shard_counts]
+    rows = [_row(report, tag, pattern, width, depth, s)
+            for s in shard_counts]
+    fracs = [e for e, _ in rows]
     assert fracs == sorted(fracs, reverse=True), (
         "per-shard derived edges must shrink as shards grow "
         f"(got edge_frac {fracs} over shards {shard_counts})")
+    p1 = [p for _, p in rows]
+    # strip enumeration: pass 1 scans exactly the owned strip, so the
+    # scanned fraction is exactly 1/S on the column-partitioned grid
+    assert all(abs(p - 1 / s) < 1e-9 for p, s in zip(p1, shard_counts)), (
+        f"pass-1 scanned fraction must fall as 1/S (got {p1} "
+        f"over shards {shard_counts})")
 
     tag, pattern, width, depths, n_shards = DEPTH_SWEEP
     for d in depths:

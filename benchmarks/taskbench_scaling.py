@@ -26,6 +26,12 @@ segmented scan vs unrolled ``comm="auto"`` vs pure dense scan, reporting
 each lowering's wire efficiency plus ``hlo_frac`` = segmented hlo_bytes /
 unrolled hlo_bytes (guarded lower-is-better by ``check_regression.py``),
 and the ``plan_lowering`` decision for every pattern.
+
+The ``taskbench_metg/*`` rows report METG (Minimum Effective Task
+Granularity, Task Bench's headline metric): per pattern x shard count,
+sweep the per-task compute grain and report the smallest task duration at
+which the executor still reaches >=50% efficiency. Guarded lower-is-better
+(at a loose tolerance — it's a timing metric) by ``check_regression.py``.
 """
 
 from __future__ import annotations
@@ -40,7 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.schedule import BlockPTGSpec, build_block_program
 from repro.linalg.host_exec import run_host_ptg
-from repro.ptg import Graph
+from repro.ptg import Graph, IndexSpace
 
 PATTERNS = ("stencil", "fft", "tree", "random")
 
@@ -91,8 +97,19 @@ def taskbench_graph(pattern: str, width: int, depth: int, n_shards: int,
                     key=lambda l, i: (l, i),
                     writes=lambda l, i: (l, i),
                     reads=lambda l, i: [(l, i)] + deps.get((l, i), []))
-    g.sequence(lambda: ((f"f{len(deps.get((l, i), ()))}", l, i)
-                        for l in range(depth) for i in range(width)))
+
+    def entries():
+        return ((f"f{len(deps.get((l, i), ()))}", l, i)
+                for l in range(depth) for i in range(width))
+
+    def owned(shard):
+        # the width×depth grid partitions by column: shard s owns exactly
+        # the columns whose blocks it owns — strip enumeration is O(owned)
+        cols = [i for i in range(width) if i * n_shards // width == shard]
+        return ((f"f{len(deps.get((l, i), ()))}", l, i)
+                for l in range(depth) for i in cols)
+
+    g.sequence(IndexSpace(entries, owned, size=depth * width))
     return g, deps
 
 
@@ -208,12 +225,13 @@ DEEP_WIDTH, DEEP_DEPTH, DEEP_SHARDS, DEEP_UNROLL_CAP = 16, 48, 8, 32
 
 def run_deep(report) -> None:
     """Deep-schedule rows: depth past the unroll cap, where the choice used
-    to cliff to the dense scan. The stencil row compiles all three
-    lowerings and reports ``hlo_frac`` (segmented / unrolled StableHLO
-    bytes — the compile-cost win) next to each lowering's wire efficiency
-    (the padding win); the other patterns report program-level stats plus
-    the ``plan_lowering`` decision (random: genuinely dense; fft: stride
-    cycling fragments the signatures — the loud dense-scan fallback)."""
+    to cliff to the dense scan. The stencil row (exact segmented scan) and
+    the fft row (fragmented exact signatures folded by the **union-cover**
+    scan) both compile all three lowerings and report ``hlo_frac``
+    (segmented / unrolled StableHLO bytes — the compile-cost win) next to
+    each lowering's wire efficiency (the padding win); the other patterns
+    report program-level stats plus the ``plan_lowering`` decision
+    (random: genuinely dense — the honest dense-scan fallback)."""
     from benchmarks.run import compile_metrics
 
     width, depth, n_shards, b = DEEP_WIDTH, DEEP_DEPTH, DEEP_SHARDS, 8
@@ -224,7 +242,8 @@ def run_deep(report) -> None:
         prog = build_block_program(spec)
         build_us = (time.perf_counter() - t0) / n_tasks * 1e6
         plan = prog.plan_lowering(unroll_cap=DEEP_UNROLL_CAP)
-        seg = prog.comm_stats(comm="auto", segmented=True)
+        cover = plan.get("cover", "exact")
+        seg = prog.comm_stats(comm="auto", segmented=True, cover=cover)
         auto = prog.comm_stats(comm="auto")
         dense = prog.comm_stats(comm="dense")
         # What the pure dense scan *actually* ships: every scan iteration
@@ -244,6 +263,7 @@ def run_deep(report) -> None:
             "pattern": pattern, "n_shards": n_shards,
             "width": width, "depth": depth, "n_tasks": n_tasks,
             "plan_mode": plan["mode"], "plan_reason": plan["reason"],
+            "plan_cover": cover,
             "n_segments": seg["n_segments"],
             "segment_density_mean": float(np.mean(
                 [s["density"] for s in seg["segments"]])),
@@ -256,8 +276,15 @@ def run_deep(report) -> None:
             "padded_bytes": seg["padded_bytes"],
             "us_per_task_build": build_us,
         }
+        if "n_segments_union" in plan:
+            extra["n_segments_union"] = plan["n_segments_union"]
+            extra["wire_efficiency_union"] = plan["wire_efficiency_union"]
         exec_us = None
-        if pattern == "stencil" and len(jax.devices()) >= n_shards:
+        # stencil exercises the exact segmented scan; fft the union cover
+        scan_kw = dict(scan=True, comm="auto", overlap=True, cover=cover)
+        if (pattern in ("stencil", "fft")
+                and plan["mode"] in ("segmented_scan", "union_cover")
+                and len(jax.devices()) >= n_shards):
             mesh = jax.sharding.Mesh(
                 np.array(jax.devices()[:n_shards]), ("shards",))
             blocks = taskbench_blocks(width, depth, b)
@@ -265,7 +292,7 @@ def run_deep(report) -> None:
             bodies = taskbench_bodies()
             with mesh:
                 lowerings = {
-                    "segmented": dict(scan=True, comm="auto", overlap=True),
+                    "segmented": scan_kw,
                     "unrolled": dict(scan=False, comm="auto", overlap=True),
                     "dense_scan": dict(scan=True),
                 }
@@ -297,3 +324,153 @@ def run_deep(report) -> None:
                if "hlo_frac" in extra else ""),
             extra=extra,
         )
+    run_metg(report)
+
+
+# --------------------------------------------------------------- METG rows
+
+METG_GRAINS = (1, 4, 16, 64)     # per-task compute repeats, geometric sweep
+METG_GRAIN_MAX = 256             # adaptive extension cap (compile-bounded)
+METG_TARGET_EFF = 0.5            # Task Bench's 50%-efficiency threshold
+
+
+def metg_bodies(grain: int, max_fan: int = 8) -> Dict[str, object]:
+    """Task-Bench bodies with a tunable compute grain: the baseline
+    reduction plus ``grain`` MXU-sized matmul steps. ``tanh`` keeps the
+    chain bounded and data-dependent (the compiler cannot fold it), and the
+    ``1e-20`` mix-in keeps it live without perturbing the reduction."""
+    def body(*ops):
+        out = ops[0] * 0.5
+        for o in ops[1:]:
+            out = out + o
+        extra = ops[0]
+        for _ in range(grain):
+            extra = jnp.tanh(extra @ ops[0])
+        return out + 1e-20 * extra
+
+    return {f"f{k}": body for k in range(max_fan + 1)}
+
+
+def _ideal_us_per_task(body, mesh, n_shards: int, arity: int,
+                       per_shard: int, depth: int, b: int) -> float:
+    """Pure-compute cost of one task at this grain with zero runtime in the
+    way, under the SAME resource split as the executor: a ``shard_map``
+    over the same mesh (emulated devices share the host's cores, so a
+    single-device baseline would overstate one shard's throughput), each
+    shard scanning ``depth`` wavefront steps that vmap the body over its
+    ``per_shard`` tasks — carry-coupled so XLA cannot parallelize across
+    wavefronts (the executor can't either)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.schedule import _shard_map
+
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.standard_normal(
+        (n_shards, depth, per_shard, arity, b, b)).astype(np.float32))
+
+    def shardfn(x):
+        def step(carry, t):
+            t = t.at[:, 0].add(carry)
+            y = jax.vmap(lambda o: body(*jnp.unstack(o)))(t)
+            return y.mean(axis=0), ()
+
+        carry, _ = jax.lax.scan(step, jnp.zeros((b, b), jnp.float32), x[0])
+        return carry[None]
+
+    with mesh:
+        ideal = jax.jit(_shard_map(shardfn, mesh=mesh, in_specs=P("shards"),
+                                   out_specs=P("shards")))
+        ideal(xs).block_until_ready()
+        reps = 10
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = ideal(xs)
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / reps / (depth * per_shard) * 1e6
+
+
+def run_metg(report) -> None:
+    """METG rows (Task Bench §IV: Minimum Effective Task Granularity): for
+    each dependence pattern × shard count, sweep the per-task compute grain
+    and report ``metg_us`` — the smallest task duration (µs of pure
+    compute) at which the end-to-end executor reaches ≥50% efficiency
+    (efficiency = ideal compute time / measured wall time). Log-linear
+    interpolation between the two bracketing grains turns the discrete
+    sweep into a continuous metric; a pattern that never reaches 50% at
+    the largest grain reports no ``metg_us`` (loud in the guard's
+    missing-case note rather than a fake number)."""
+    width, depth, b = 16, 12, 8
+    for pattern in PATTERNS:
+        for n_shards in (4, 8):
+            if len(jax.devices()) < n_shards:
+                continue
+            spec, deps = taskbench_spec(pattern, width, depth, n_shards, b)
+            prog = build_block_program(spec)
+            mesh = jax.sharding.Mesh(
+                np.array(jax.devices()[:n_shards]), ("shards",))
+            blocks = taskbench_blocks(width, depth, b)
+            packed = jnp.asarray(prog.pack(blocks))
+            arity = 1 + max(len(d) for d in deps.values())
+            per_shard = max(width // n_shards, 1)
+
+            grains = list(METG_GRAINS)
+            grains_us: List[float] = []
+            effs: List[float] = []
+            gi = 0
+            while gi < len(grains):
+                grain = grains[gi]
+                bodies = metg_bodies(grain)
+                ideal_us = _ideal_us_per_task(
+                    bodies[f"f{arity - 1}"], mesh, n_shards, arity,
+                    per_shard, depth, b)
+                with mesh:
+                    step = jax.jit(prog.auto_executor(bodies, mesh))
+                    step(packed).block_until_ready()
+                    reps = 5
+                    t0 = time.perf_counter()
+                    for _ in range(reps):
+                        out = step(packed)
+                    out.block_until_ready()
+                wall_us = (time.perf_counter() - t0) / reps * 1e6
+                # ideal wall time: every shard runs its own strip with no
+                # runtime in the way (same mesh, so same resource split)
+                eff = ideal_us * depth * per_shard / wall_us
+                grains_us.append(ideal_us)
+                effs.append(min(eff, 1.0))
+                gi += 1
+                # coarse-grain extension: a pattern that hasn't crossed 50%
+                # by the end of the sweep gets one more (4x) notch, capped —
+                # the overhead floor is real but the crossing still exists
+                if (gi == len(grains) and max(effs) < METG_TARGET_EFF
+                        and grain * 4 <= METG_GRAIN_MAX):
+                    grains.append(grain * 4)
+
+            metg_us = None
+            for j, eff in enumerate(effs):
+                if eff < METG_TARGET_EFF:
+                    continue
+                if j == 0 or effs[j - 1] >= METG_TARGET_EFF:
+                    metg_us = grains_us[j]
+                else:  # log-linear interpolation across the crossing
+                    g0, g1 = np.log(grains_us[j - 1]), np.log(grains_us[j])
+                    e0, e1 = effs[j - 1], effs[j]
+                    frac = (METG_TARGET_EFF - e0) / (e1 - e0)
+                    metg_us = float(np.exp(g0 + frac * (g1 - g0)))
+                break
+
+            extra = {
+                "pattern": pattern, "n_shards": n_shards,
+                "width": width, "depth": depth,
+                "grain_us": [round(g, 3) for g in grains_us],
+                "grain_efficiency": [round(e, 4) for e in effs],
+            }
+            if metg_us is not None:
+                extra["metg_us"] = round(metg_us, 3)
+            report(
+                f"taskbench_metg/{pattern}/s{n_shards}",
+                metg_us if metg_us is not None else grains_us[-1],
+                (f"metg_us={metg_us:.1f};" if metg_us is not None
+                 else "metg_us=none;")
+                + f"eff={';'.join(f'{e:.2f}' for e in effs)}",
+                extra=extra,
+            )

@@ -27,9 +27,6 @@ except ImportError:  # pragma: no cover — exercised only on slim images
         elements = list(elements)
         return _Strategy(lambda rng: rng.choice(elements))
 
-    def _booleans():
-        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
-
     def _lists(elements, *, min_size=0, max_size=None):
         hi = max_size if max_size is not None else min_size + 10
         return _Strategy(lambda rng: [elements.draw(rng)
@@ -68,8 +65,19 @@ except ImportError:  # pragma: no cover — exercised only on slim images
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = _integers
     st_mod.sampled_from = _sampled_from
-    st_mod.booleans = _booleans
     st_mod.lists = _lists
+
+    def _unstubbed(name):
+        # PEP 562 module __getattr__: an unstubbed strategy must fail at
+        # the use site with a pointer here, not as a silent None or a
+        # bare AttributeError deep inside @given
+        raise AttributeError(
+            f"hypothesis stub: strategies.{name} is not stubbed — the real "
+            "hypothesis is absent and conftest.py's stand-in only provides "
+            "integers, sampled_from, lists; extend the stub or install "
+            "hypothesis")
+
+    st_mod.__getattr__ = _unstubbed
 
     hyp_mod = types.ModuleType("hypothesis")
     hyp_mod.given = _given

@@ -200,6 +200,30 @@ class CommPattern:
         raise ValueError(f"unknown lowering choice {choice!r}")
 
 
+def union_pattern(patterns: Sequence["CommPattern"]) -> "CommPattern":
+    """The *union permutation cover* of a run of comm patterns: per-pair
+    counts are the pairwise max, so the union's :meth:`CommPattern.rounds`
+    give a single static round structure every wavefront in the run can ride
+    — a pair inactive at some wavefront simply ships trash padding there.
+
+    This is what lets a fragmented run (every wavefront a different partial
+    permutation, e.g. deep FFT's stride cycling) still lower to one
+    ``jax.lax.scan``: the scan body carries the union rounds, and each
+    wavefront realizes its own slots on them. The padding cost is the
+    inactive (pair, wavefront) slots — accounted honestly by
+    ``BlockProgram.comm_stats(cover="union")``, and accepted by
+    ``plan_lowering`` only when it still beats the dense-scan wire."""
+    if not patterns:
+        return CommPattern(level=0, n_shards=0, pair_counts={})
+    pair_counts: Dict[Tuple[int, int], int] = {}
+    for p in patterns:
+        for pair, cnt in p.pair_counts.items():
+            pair_counts[pair] = max(pair_counts.get(pair, 0), cnt)
+    return CommPattern(level=patterns[0].level,
+                       n_shards=patterns[0].n_shards,
+                       pair_counts=dict(sorted(pair_counts.items())))
+
+
 def segment_runs(items: Sequence[Hashable]) -> List[Tuple[int, int]]:
     """Partition ``[0, len(items))`` into maximal ``[start, stop)`` runs of
     equal items. The segmentation primitive shared by the segmented-scan

@@ -63,7 +63,39 @@ except ImportError:  # pragma: no cover — older jax keeps it experimental
     from jax.experimental.shard_map import shard_map
 
 from .discovery import (PTG, CommPattern, WavefrontSchedule, discover,
-                        discover_local, segment_runs)
+                        discover_local, segment_runs, union_pattern)
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication check off: task bodies may be
+    Pallas kernels (``vmap(pallas_call)`` — one fused launch per wavefront),
+    and ``pallas_call`` has no replication rule, so ``check_rep=True`` would
+    reject them outright. Every executor output is sharded ``P(axis)``
+    (nothing replicated), so the check carries no information here anyway.
+    Newer jax renames/drops the flag — fall back to the plain call."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:  # pragma: no cover — future jax without check_rep
+        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def _narrow_tables(tree):
+    """Index tables enter the jitted executor as constants, and StableHLO
+    prints them as hex text — 8 chars per int32 element. Slot and exchange
+    indices are bounded by ``n_slots`` (hundreds, not billions), so narrow
+    each table to int16 when its values fit: the lowered program's constant
+    footprint halves (jnp indexing re-widens on use, so the arithmetic is
+    unchanged)."""
+    def narrow(v):
+        v = np.asarray(v)
+        if (np.issubdtype(v.dtype, np.integer)
+                and (v.size == 0 or v.max() < np.iinfo(np.int16).max)):
+            return jnp.asarray(v.astype(np.int16))
+        return jnp.asarray(v)
+
+    return jax.tree.map(narrow, tree)
+
 
 logger = logging.getLogger(__name__)
 
@@ -214,26 +246,106 @@ class BlockProgram:
         return self.patterns[w].signature(
             self.lowered_pattern(w, comm, density_threshold))
 
-    def _segment_plan(self, comm: str, density_threshold: float
+    def _segment_plan(self, comm: str, density_threshold: float,
+                      cover: str = "exact"
                       ) -> Tuple[List[Tuple[int, int]], List[Tuple]]:
-        key = ("segments", comm, density_threshold)
+        if cover not in ("exact", "union"):
+            raise ValueError(f"unknown signature cover {cover!r}")
+        key = ("segments", comm, density_threshold, cover)
         if key not in self._cache:
-            sigs = [self.comm_signature(w, comm, density_threshold)
-                    for w in range(len(self.tables))]
+            W = len(self.tables)
+            if cover == "exact":
+                sigs = [self.comm_signature(w, comm, density_threshold)
+                        for w in range(W)]
+            else:
+                # union cover: group maximal runs of sparse-class wavefronts
+                # (ppermute or silent) and give the whole run the *union*
+                # pattern's static rounds — every wavefront in the run can
+                # ride them (inactive pairs ship trash), so a fragmented run
+                # still folds into one scan. Dense (all_to_all) wavefronts
+                # keep their own class.
+                choices = [self.lowered_pattern(w, comm, density_threshold)
+                           for w in range(W)]
+                cls = ["dense" if c == "all_to_all" else "sparse"
+                       for c in choices]
+                sigs: List[Tuple] = [()] * W
+                for (s, e) in segment_runs(cls):
+                    if cls[s] == "dense":
+                        sig: Tuple = ("all_to_all",)
+                    else:
+                        union = union_pattern(
+                            [self.patterns[w] for w in range(s, e)])
+                        sig = (("ppermute", union.round_perms())
+                               if union.total else ("none",))
+                    for w in range(s, e):
+                        sigs[w] = sig
             self._cache[key] = (segment_runs(sigs), sigs)
         return self._cache[key]  # type: ignore[return-value]
 
     def segments(self, comm: str = "auto",
-                 density_threshold: float = 0.5) -> List[Tuple[int, int]]:
+                 density_threshold: float = 0.5,
+                 cover: str = "exact") -> List[Tuple[int, int]]:
         """Partition the wavefront sequence into maximal ``[start, stop)``
         runs of equal comm signature — the segmented-scan executor emits one
         ``jax.lax.scan`` per run, with tables padded to each run's own
-        ``T_max``/``M_max`` (never a global maximum)."""
-        return self._segment_plan(comm, density_threshold)[0]
+        ``T_max``/``M_max`` (never a global maximum).
+
+        ``cover="exact"`` keys runs on each wavefront's own signature;
+        ``cover="union"`` coarsens sparse runs to the union permutation
+        cover (:func:`~repro.core.discovery.union_pattern`), trading trash
+        padding for far fewer segments on fragmented schedules."""
+        return self._segment_plan(comm, density_threshold, cover)[0]
+
+    def _union_rounds(self, w: int, perms: Tuple) -> List[SparseRound]:
+        """Realize wavefront ``w``'s exchange on the union cover's static
+        ``perms``: each pair active at ``w`` ships its slots in the (single)
+        union round containing it; pairs inactive at ``w`` pad with trash.
+        Per-pair slot lists are rebuilt from the dense ``exchange[w]``
+        tables (send and recv are aligned by message index)."""
+        key = ("urounds", w, perms)
+        if key in self._cache:
+            return self._cache[key]  # type: ignore[return-value]
+        n, trash = self.spec.n_shards, self.trash
+        send, recv = self.exchange[w]            # [src, dst, M], [dst, src, M]
+        covered = {p for perm in perms for p in perm}
+        missing = set(self.patterns[w].pair_counts) - covered
+        if missing:
+            raise ValueError(
+                f"union cover does not span wavefront {w}'s pairs "
+                f"{sorted(missing)} — messages would be dropped")
+        rounds: List[SparseRound] = []
+        for perm in perms:
+            pair_slots = {}
+            for src, dst in perm:
+                ss = [int(x) for x in send[src, dst] if x != trash]
+                rs = [int(x) for x in recv[dst, src] if x != trash]
+                assert len(ss) == len(rs)
+                if ss:
+                    pair_slots[(src, dst)] = (ss, rs)
+            width = max((len(v[0]) for v in pair_slots.values()), default=0)
+            r_send = np.full((n, width), trash, np.int32)
+            r_recv = np.full((n, width), trash, np.int32)
+            for (src, dst), (ss, rs) in pair_slots.items():
+                for m in range(len(ss)):
+                    r_send[src, m] = ss[m]
+                    r_recv[dst, m] = rs[m]
+            rounds.append(SparseRound(tuple(perm), r_send, r_recv))
+        self._cache[key] = rounds
+        return rounds
+
+    def _rounds_for(self, w: int, sig: Tuple,
+                    cover: str) -> List[SparseRound]:
+        """The ppermute rounds wavefront ``w`` contributes to a segment with
+        signature ``sig``: its own exact rounds, or its realization on the
+        segment's union cover."""
+        if cover == "union":
+            return self._union_rounds(w, sig[1])
+        return self.sparse_exchange[w]
 
     def comm_stats(self, *, comm: str = "dense",
                    density_threshold: float = 0.5,
-                   segmented: bool = False) -> dict:
+                   segmented: bool = False,
+                   cover: str = "exact") -> dict:
         """Bytes on the wire per wavefront under lowering policy ``comm``
         ("dense" | "sparse" | "auto") — feeds the roofline's collective term
         and the §Perf iteration log.
@@ -248,7 +360,11 @@ class BlockProgram:
         ``M_max`` for all_to_all runs, per-round segment-max widths for
         ppermute runs), and the result gains ``n_segments`` plus a
         per-segment breakdown — what the benchmarks and the CI regression
-        guard watch for the deep-schedule rows.
+        guard watch for the deep-schedule rows. ``cover="union"`` accounts
+        the union-cover coarsening (see :meth:`segments`): every wavefront
+        of a sparse run ships the *union* rounds, so the inactive
+        (pair, wavefront) slots show up as ``padded_bytes`` — the padding
+        is never hidden from the wire-efficiency trajectory.
         """
         b0, b1 = self.spec.block_shape
         block_bytes = b0 * b1 * np.dtype(jnp.dtype(self.spec.dtype)).itemsize
@@ -256,7 +372,7 @@ class BlockProgram:
         seg_wire: Dict[int, int] = {}
         seg_rows: List[dict] = []
         if segmented:
-            runs, sigs = self._segment_plan(comm, density_threshold)
+            runs, sigs = self._segment_plan(comm, density_threshold, cover)
             for (s, e) in runs:
                 sig = sigs[s]
                 if sig[0] == "all_to_all":
@@ -264,8 +380,9 @@ class BlockProgram:
                                 for w in range(s, e))
                     wire_w = n * n * m_seg
                 elif sig[0] == "ppermute":
-                    widths = [max(self.sparse_exchange[w][r].width
-                                  for w in range(s, e))
+                    per_w = {w: self._rounds_for(w, sig, cover)
+                             for w in range(s, e)}
+                    widths = [max(per_w[w][r].width for w in range(s, e))
                               for r in range(len(sig[1]))]
                     wire_w = sum(len(p) * wd
                                  for p, wd in zip(sig[1], widths))
@@ -323,6 +440,7 @@ class BlockProgram:
         }
         if segmented:
             out["segmented"] = True
+            out["cover"] = cover
             out["n_segments"] = len(seg_rows)
             out["segments"] = seg_rows
         return out
@@ -457,8 +575,9 @@ class BlockProgram:
         return [], []
 
     def _segment_tables(self, comm: str, density_threshold: float,
-                        overlap: bool) -> List[Tuple[int, int, Tuple,
-                                                     Dict[str, np.ndarray]]]:
+                        overlap: bool, cover: str = "exact"
+                        ) -> List[Tuple[int, int, Tuple,
+                                        Dict[str, np.ndarray]]]:
         """Memoized per-segment stacked tables for the segmented-scan
         lowering: ``[(start, stop, signature, tabs)]``, with compute tables
         padded to the segment's T_max and exchange tables to the segment's
@@ -468,11 +587,16 @@ class BlockProgram:
         exact (indep, dep) tables under ``h:*`` keys plus stacked splits for
         the scanned tail — landing wavefront w-1's arrivals *between* w's
         halo-independent and -dependent compute is what lets the collective
-        run concurrently with compute inside the scan."""
-        key = ("seg_tables", comm, density_threshold, overlap)
+        run concurrently with compute inside the scan.
+
+        ``cover="union"`` stacks each sparse segment's exchange from the
+        union cover's rounds (:meth:`_rounds_for`) instead of each
+        wavefront's own — same table shapes, same scan body, just more
+        trash padding where a pair sits a wavefront out."""
+        key = ("seg_tables", comm, density_threshold, overlap, cover)
         if key in self._cache:
             return self._cache[key]  # type: ignore[return-value]
-        runs, sigs = self._segment_plan(comm, density_threshold)
+        runs, sigs = self._segment_plan(comm, density_threshold, cover)
         n, trash = self.spec.n_shards, self.trash
         segs = []
         for (s, e) in runs:
@@ -494,13 +618,14 @@ class BlockProgram:
                 m_seg = max(self.exchange[w][0].shape[-1] for w in range(s, e))
                 self._stack_exchange(tabs, range(s, e), m_seg)
             elif sig[0] == "ppermute":
+                per_w = {w: self._rounds_for(w, sig, cover)
+                         for w in range(s, e)}
                 for r in range(len(sig[1])):
-                    wr = max(self.sparse_exchange[w][r].width
-                             for w in range(s, e))
+                    wr = max(per_w[w][r].width for w in range(s, e))
                     snd = np.full((L, n, wr), trash, np.int32)
                     rcv = np.full((L, n, wr), trash, np.int32)
                     for j, w in enumerate(range(s, e)):
-                        rnd = self.sparse_exchange[w][r]
+                        rnd = per_w[w][r]
                         snd[j, :, : rnd.width] = rnd.send
                         rcv[j, :, : rnd.width] = rnd.recv
                     tabs[f"send{r}"] = np.swapaxes(snd, 0, 1).copy()
@@ -521,6 +646,7 @@ class BlockProgram:
         comm: Optional[str] = None,
         overlap: bool = False,
         density_threshold: float = 0.5,
+        cover: str = "exact",
     ) -> Callable[[jnp.ndarray], jnp.ndarray]:
         """Build the jittable SPMD executor.
 
@@ -539,7 +665,12 @@ class BlockProgram:
           the **segmented scan**: the wavefront sequence is partitioned into
           maximal runs of equal comm signature (:meth:`segments`) and each
           run becomes one scan carrying that run's sparse collective, padded
-          to the run's own maxima — sparse wire at scan-sized HLO.
+          to the run's own maxima — sparse wire at scan-sized HLO. With
+          ``cover="union"`` the sparse runs are coarsened to the union
+          permutation cover first (:meth:`segments`), so even a schedule
+          whose exact signatures fragment (deep FFT's stride cycling) folds
+          into a handful of scans — at the honestly-accounted cost of
+          trash slots where a pair sits a wavefront out.
 
         ``overlap=True`` double-buffers the exchange in the unrolled and
         segmented lowerings: issue wavefront w's collective, run w+1's
@@ -559,12 +690,14 @@ class BlockProgram:
             comm = "dense" if scan else "auto"
         if comm not in ("dense", "sparse", "auto"):
             raise ValueError(f"unknown comm policy {comm!r}")
+        if cover not in ("exact", "union"):
+            raise ValueError(f"unknown signature cover {cover!r}")
         if scan:
             if comm == "dense" and not overlap:
                 return self._dense_scan_executor(bodies, mesh, axis)
             return self._segmented_scan_executor(
                 bodies, mesh, axis, comm=comm, overlap=overlap,
-                density_threshold=density_threshold)
+                density_threshold=density_threshold, cover=cover)
         return self._unrolled_executor(
             bodies, mesh, axis, comm=comm, overlap=overlap,
             density_threshold=density_threshold)
@@ -594,26 +727,29 @@ class BlockProgram:
             local, _ = jax.lax.scan(step, local, tabs0)
             return local
 
-        shmapped = shard_map(
+        shmapped = _shard_map(
             run, mesh=mesh,
             in_specs=(P(axis), {k: P(axis) for k in tabs_np}),
             out_specs=P(axis))
 
         def entry(blocks):
-            return shmapped(
-                blocks, {k: jnp.asarray(v) for k, v in tabs_np.items()})
+            return shmapped(blocks, _narrow_tables(tabs_np))
 
         return entry
 
     def _segmented_scan_executor(self, bodies, mesh, axis, *, comm,
-                                 overlap, density_threshold):
+                                 overlap, density_threshold,
+                                 cover="exact"):
         """One ``jax.lax.scan`` per run of equal comm signature, stitched
         sequentially: sparse (ppermute-round) exchanges inside scans without
         unrolled-HLO growth. With ``overlap`` the scan carry holds the
         in-flight exchange buffers (double buffering), and each segment's
         head wavefront is unrolled so the pending buffers of the *previous*
-        segment — a different carry shape — land across the boundary."""
-        segs = self._segment_tables(comm, density_threshold, overlap)
+        segment — a different carry shape — land across the boundary.
+        ``cover="union"`` runs the same machinery over the union-cover
+        segment plan — only the (static) perms and the table contents
+        change, never the scan-body structure."""
+        segs = self._segment_tables(comm, density_threshold, overlap, cover)
         wavefront_compute = self._compute_fn(bodies)
 
         def tbl_of(wtab, prefix=""):
@@ -705,13 +841,13 @@ class BlockProgram:
             return loc0[None]
 
         tabs_tree = [tabs for (_s, _e, _sig, tabs) in segs]
-        shmapped = shard_map(
+        shmapped = _shard_map(
             run_overlap if overlap else run, mesh=mesh,
             in_specs=(P(axis), jax.tree.map(lambda _: P(axis), tabs_tree)),
             out_specs=P(axis))
 
         def entry(blocks):
-            return shmapped(blocks, jax.tree.map(jnp.asarray, tabs_tree))
+            return shmapped(blocks, _narrow_tables(tabs_tree))
 
         return entry
 
@@ -733,16 +869,16 @@ class BlockProgram:
                 return []
             if choices[w] == "all_to_all":
                 s_i, r_i = self.exchange[w]
-                buf = loc0[jnp.asarray(s_i)[idx]]    # [n, M, b0, b1]
+                buf = loc0[_narrow_tables(s_i)[idx]]  # [n, M, b0, b1]
                 buf = jax.lax.all_to_all(buf, axis, split_axis=0,
                                          concat_axis=0, tiled=True)
-                recv = jnp.asarray(r_i)[idx].reshape(-1)
+                recv = _narrow_tables(r_i)[idx].reshape(-1)
                 return [(recv, buf.reshape(-1, *loc0.shape[1:]))]
             pending = []
             for rnd in self.sparse_exchange[w]:      # ppermute rounds
-                buf = loc0[jnp.asarray(rnd.send)[idx]]   # [width, b0, b1]
+                buf = loc0[_narrow_tables(rnd.send)[idx]]  # [width, b0, b1]
                 buf = jax.lax.ppermute(buf, axis, list(rnd.perm))
-                pending.append((jnp.asarray(rnd.recv)[idx], buf))
+                pending.append((_narrow_tables(rnd.recv)[idx], buf))
             return pending
 
         def land(loc0, pending):
@@ -751,7 +887,7 @@ class BlockProgram:
             return loc0
 
         def shard_tbl(tbl, idx):
-            return {t: (jnp.asarray(o)[idx], jnp.asarray(u)[idx])
+            return {t: (_narrow_tables(o)[idx], _narrow_tables(u)[idx])
                     for t, (o, u) in tbl.items()}
 
         def run_unrolled(local):
@@ -773,8 +909,8 @@ class BlockProgram:
             loc0 = land(loc0, pending)  # W-1 never sends; safety net
             return loc0[None]
 
-        return shard_map(run_unrolled, mesh=mesh, in_specs=(P(axis),),
-                         out_specs=P(axis))
+        return _shard_map(run_unrolled, mesh=mesh, in_specs=(P(axis),),
+                          out_specs=P(axis))
 
     def plan_lowering(
         self,
@@ -796,14 +932,20 @@ class BlockProgram:
         - deeper and genuinely dense (no wavefront lowers to ppermute, no
           overlap asked): **pure dense scan** — there is no sparsity to
           keep, so take the single-scan minimal HLO;
-        - deeper and too fragmented to segment: **dense scan** with
-          ``discards=True`` — the caller's preference is dropped, which
-          :meth:`auto_executor` reports loudly instead of silently.
+        - deeper and too fragmented to segment exactly, but the **union
+          permutation cover** fits the cap *and* its honestly-accounted
+          wire efficiency still beats what the pure dense scan would ship:
+          **union-cover scan** (``mode="union_cover"``) — fragmented runs
+          fold into scans over the union rounds, trash-padding the inactive
+          (pair, wavefront) slots;
+        - otherwise: **dense scan** with ``discards=True`` — the caller's
+          preference is dropped, which :meth:`auto_executor` reports loudly
+          instead of silently.
         """
         W = self.schedule.n_wavefronts
         cap = unroll_cap if segment_cap is None else segment_cap
         plan = {"comm": comm, "overlap": overlap, "n_wavefronts": W,
-                "discards": False}
+                "discards": False, "cover": "exact"}
         if W <= unroll_cap:
             plan.update(mode="unrolled",
                         reason=f"depth {W} <= unroll_cap {unroll_cap}")
@@ -825,9 +967,42 @@ class BlockProgram:
                         reason=f"{len(runs)} segments <= "
                                f"segment_cap {cap}")
         else:
-            plan.update(mode="dense_scan", discards=True,
-                        reason=f"comm signatures too fragmented: "
-                               f"{len(runs)} segments > segment_cap {cap}")
+            # exact signatures fragment; before discarding the sparse wire,
+            # try the union permutation cover, keeping it only when the
+            # padding it adds still undercuts the dense scan's.
+            uruns, _ = self._segment_plan(comm, density_threshold, "union")
+            ustats = self.comm_stats(comm=comm,
+                                     density_threshold=density_threshold,
+                                     segmented=True, cover="union")
+            n = self.spec.n_shards
+            m_max = max((e[0].shape[-1] for e in self.exchange), default=0)
+            scan_wire = W * n * n * m_max
+            real = sum(p.total for p in self.patterns)
+            eff_dense_scan = real / scan_wire if scan_wire else 1.0
+            plan["n_segments_union"] = len(uruns)
+            plan["wire_efficiency_union"] = ustats["wire_efficiency"]
+            plan["wire_efficiency_dense_scan"] = eff_dense_scan
+            if (len(uruns) <= cap
+                    and ustats["wire_efficiency"] > eff_dense_scan):
+                plan.update(
+                    mode="union_cover", cover="union",
+                    reason=f"exact comm signatures too fragmented "
+                           f"({len(runs)} segments > segment_cap {cap}); "
+                           f"union cover folds them into {len(uruns)} "
+                           f"segments at wire efficiency "
+                           f"{ustats['wire_efficiency']:.3f} > dense scan's "
+                           f"{eff_dense_scan:.3f}")
+            else:
+                why = (f"union cover still fragmented ({len(uruns)} "
+                       f"segments > segment_cap {cap})"
+                       if len(uruns) > cap else
+                       f"union cover wire efficiency "
+                       f"{ustats['wire_efficiency']:.3f} <= dense scan's "
+                       f"{eff_dense_scan:.3f}")
+                plan.update(mode="dense_scan", discards=True,
+                            reason=f"comm signatures too fragmented: "
+                                   f"{len(runs)} segments > segment_cap "
+                                   f"{cap}, and {why}")
         return plan
 
     def auto_executor(
@@ -846,7 +1021,9 @@ class BlockProgram:
         apps, benchmarks) — see :meth:`plan_lowering`: shallow schedules
         unroll with per-wavefront sparse/dense collective choice and
         compute/comm overlap; deeper schedules keep the sparse wire through
-        the segmented scan; only genuinely dense or hopelessly fragmented
+        the segmented scan (coarsened to the union permutation cover when
+        the exact signatures fragment but the cover's wire still beats the
+        dense scan's); only genuinely dense or hopelessly fragmented
         schedules take the pure dense scan. When that last fallback discards
         the caller's ``comm``/``overlap`` preference it is logged loudly —
         never silent."""
@@ -857,10 +1034,11 @@ class BlockProgram:
             return self.executor(bodies, mesh, axis, scan=False, comm=comm,
                                  overlap=overlap,
                                  density_threshold=density_threshold)
-        if plan["mode"] == "segmented_scan":
+        if plan["mode"] in ("segmented_scan", "union_cover"):
             return self.executor(bodies, mesh, axis, scan=True, comm=comm,
                                  overlap=overlap,
-                                 density_threshold=density_threshold)
+                                 density_threshold=density_threshold,
+                                 cover=plan["cover"])
         if plan["discards"]:
             logger.warning(
                 "auto_executor: depth %d > unroll_cap %d and %s; falling "

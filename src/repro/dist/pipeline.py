@@ -35,7 +35,7 @@ except ImportError:  # pragma: no cover — older jax keeps it experimental
     from jax.experimental.shard_map import shard_map
 
 from repro.core.discovery import PTG, WavefrontSchedule, segment_runs
-from repro.ptg import Graph
+from repro.ptg import Graph, IndexSpace
 
 
 def pipeline_graph(n_stages: int, n_micro: int) -> Graph:
@@ -44,12 +44,17 @@ def pipeline_graph(n_stages: int, n_micro: int) -> Graph:
     ("act", s-1, m); the serial-resource edge (s, m-1) is a pure control
     ``after`` edge. Hand-off data deps, stage sequencing, and the single
     seed (0, 0) all derive from those declarations. Task keys stay the
-    legacy (stage, micro) tuples."""
+    legacy (stage, micro) tuples. The (stage, micro) space is partitionable
+    by stage, so each stage's ``derive_local`` pass 1 enumerates its own
+    microbatch row instead of scanning the whole trapezoid."""
     g = Graph("pipeline", n_shards=n_stages, owner=lambda blk: blk[1])
     g.task_type(
         "stage",
-        space=lambda: ((s, m) for s in range(n_stages)
-                       for m in range(n_micro)),
+        space=IndexSpace(
+            lambda: ((s, m) for s in range(n_stages)
+                     for m in range(n_micro)),
+            lambda shard: ((shard, m) for m in range(n_micro)),
+            size=n_stages * n_micro),
         key=lambda s, m: (s, m),
         writes=lambda s, m: ("act", s, m),
         reads=lambda s, m: [("act", s - 1, m)] if s else [],

@@ -28,3 +28,20 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 256, bn: int = 256,
     if _on_tpu() and tiles_ok:
         return block_gemm(a, b, bm=bm, bn=bn, bk=bk)
     return block_gemm_ref(a, b)
+
+
+def task_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = 256,
+                bn: int = 256, bk: int = 256) -> jnp.ndarray:
+    """Per-task ``a @ b`` body for the block executor's compute step.
+
+    Unlike :func:`matmul` this never falls back to the jnp oracle — it is
+    *always* the Pallas kernel (Mosaic on TPU, interpret mode elsewhere),
+    so plugging it into ``gemm_bodies(matmul=task_matmul)`` /
+    ``cholesky_bodies(matmul=task_matmul)`` exercises the kernel path end
+    to end. The executor vmaps task bodies over each wavefront's task
+    table, and ``vmap(pallas_call)`` folds the batch into a leading grid
+    dimension: all of a wavefront's trailing updates become one fused
+    kernel launch. Tile sizes clamp to the block shape, so the paper-scale
+    b×b task blocks run as a single-tile grid.
+    """
+    return block_gemm(a, b, bm=bm, bn=bn, bk=bk, interpret=not _on_tpu())

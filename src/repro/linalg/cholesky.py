@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.schedule import BlockPTGSpec, BlockProgram, build_block_program
-from repro.ptg import Graph
+from repro.ptg import Graph, IndexSpace
 
 
 def cholesky_graph(nb: int, pr: int, pc: int, b: int,
@@ -67,7 +67,32 @@ def cholesky_graph(nb: int, pr: int, pc: int, b: int,
                 for j in range(k + 1, i):
                     yield ("gemm", k, i, j)
 
-    g.sequence(program)
+    def res(lo: int, hi: int, p: int, r: int):
+        """Indices in [lo, hi) congruent to r mod p."""
+        return range(lo + (r - lo) % p, hi, p)
+
+    def owned(shard):
+        # the triangular space partitions by block-cyclic residue: each
+        # task type's written block fixes a (row mod pr, col mod pc)
+        # residue class, so the shard walks only its own rows/columns —
+        # O(owned) instead of the O(nb³) full triangle
+        r0, c0 = divmod(shard, pc)
+        for k in range(nb):
+            if k % pr == r0 and k % pc == c0:
+                yield ("potrf", k)                       # writes L_kk
+            if k % pc == c0:
+                for i in res(k + 1, nb, pr, r0):
+                    yield ("trsm", i, k)                 # writes L_ik
+            for i in res(k + 1, nb, pr, r0):
+                if i % pc == c0:
+                    yield ("syrk", k, i)                 # writes A_ii
+            for i in res(k + 1, nb, pr, r0):
+                for j in res(k + 1, i, pc, c0):
+                    yield ("gemm", k, i, j)              # writes A_ij
+
+    n_tasks = (nb + 2 * (nb * (nb - 1) // 2)
+               + nb * (nb - 1) * (nb - 2) // 6)
+    g.sequence(IndexSpace(program, owned, size=n_tasks))
     return g
 
 
@@ -95,10 +120,15 @@ def cholesky_executor(prog: BlockProgram, mesh, axis: str = "shards", *,
     w's panel broadcast is issued before w+1's halo-independent trailing
     updates (owner-local A_ij accumulations), the paper's Fig 9 overlap.
     ``policy`` kwargs (``comm``/``overlap``/``segment_cap``/
-    ``density_threshold``) pass through to ``auto_executor``; note deep
-    Cholesky panel broadcasts change shape every panel (fragmented comm
-    signatures), so past ``unroll_cap`` the policy may legitimately — and
-    loudly — fall back to the dense scan."""
+    ``density_threshold``) pass through to ``auto_executor``, whose ladder
+    is: unrolled below ``unroll_cap``; segmented scan when the exact comm
+    signatures form few runs; **union-cover scan** when they fragment (deep
+    Cholesky's panel broadcasts change shape every panel) but the union
+    permutation cover's wire still beats the dense scan's; the pure dense
+    scan only as the loudly-reported last resort. ``matmul``/``trsm`` are
+    pluggable bodies — pass e.g. ``repro.kernels.block_gemm.ops.task_matmul``
+    to run the trailing updates as a fused Pallas kernel per wavefront
+    (the jnp default stays the numerical oracle)."""
     return prog.auto_executor(cholesky_bodies(matmul, trsm), mesh, axis,
                               unroll_cap=unroll_cap, **policy)
 

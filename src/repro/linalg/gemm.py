@@ -30,7 +30,13 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.schedule import BlockPTGSpec, BlockProgram, build_block_program
-from repro.ptg import Graph
+from repro.ptg import Graph, IndexSpace
+
+
+def _res(p: int, r: int, n: int):
+    """Indices in [0, n) congruent to r mod p — one block-cyclic residue
+    class, the strip a shard owns along one grid dimension."""
+    return range(r % p, n, p)
 
 
 # ------------------------------------------------------------- 2D mapping
@@ -45,24 +51,39 @@ def gemm_2d_graph(nb: int, pr: int, pc: int, b: int, *, staged: bool = False,
 
     g = Graph("gemm2d", n_shards=pr * pc, owner=owner,
               block_shape=(b, b), dtype=dtype)
+    # partitionable grid spaces: each type's written block fixes a block-
+    # cyclic residue class per shard, so derive_local's pass 1 enumerates
+    # only the shard's strip instead of relevance-filtering the whole grid
     g.task_type(
         "sa",
-        space=lambda: ((i, kk) for i in range(nb) for kk in range(nb)),
+        space=IndexSpace(
+            lambda: ((i, kk) for i in range(nb) for kk in range(nb)),
+            lambda s: ((i, kk) for i in _res(pr, s // pc, nb)
+                       for kk in _res(pc, s % pc, nb)),
+            size=nb * nb),
         writes=lambda i, kk: ("A", i, kk),
         reads=lambda i, kk: [("A", i, kk)],          # identity "send" body
         after=(lambda i, kk: [("sa", i, kk - 1)] if kk else [])
         if staged else None)
     g.task_type(
         "sb",
-        space=lambda: ((kk, j) for kk in range(nb) for j in range(nb)),
+        space=IndexSpace(
+            lambda: ((kk, j) for kk in range(nb) for j in range(nb)),
+            lambda s: ((kk, j) for kk in _res(pr, s // pc, nb)
+                       for j in _res(pc, s % pc, nb)),
+            size=nb * nb),
         writes=lambda kk, j: ("B", kk, j),
         reads=lambda kk, j: [("B", kk, j)],
         after=(lambda kk, j: [("sb", kk - 1, j)] if kk else [])
         if staged else None)
     g.task_type(
         "gemm",
-        space=lambda: ((i, kk, j) for i in range(nb)
-                       for kk in range(nb) for j in range(nb)),
+        space=IndexSpace(
+            lambda: ((i, kk, j) for i in range(nb)
+                     for kk in range(nb) for j in range(nb)),
+            lambda s: ((i, kk, j) for i in _res(pr, s // pc, nb)
+                       for kk in range(nb) for j in _res(pc, s % pc, nb)),
+            size=nb ** 3),
         writes=lambda i, kk, j: ("C", i, j),         # RMW => k-chain derived
         reads=lambda i, kk, j: [("C", i, j), ("A", i, kk), ("B", kk, j)])
     return g
@@ -105,33 +126,66 @@ def gemm_3d_graph(nb: int, q: int, b: int, *, dtype=jnp.float32) -> Graph:
 
     g = Graph("gemm3d", n_shards=q ** 3, owner=owner,
               block_shape=(b, b), dtype=dtype)
+
+    def grid(s):
+        """Shard id -> (slab, row residue, col residue)."""
+        return s // (q * q), (s // q) % q, s % q
+
+    def slab_ks(l: int, r: int):
+        """k indices inside slab l congruent to r mod q."""
+        lo = l * kb
+        return range(lo + (r - lo) % q, lo + kb, q)
+
     g.task_type(
         "sa",
-        space=lambda: ((i, kk) for i in range(nb) for kk in range(nb)),
+        space=IndexSpace(
+            lambda: ((i, kk) for i in range(nb) for kk in range(nb)),
+            lambda s: ((i, kk) for i in _res(q, grid(s)[1], nb)
+                       for kk in slab_ks(grid(s)[0], grid(s)[2])),
+            size=nb * nb),
         writes=lambda i, kk: ("A", i, kk),
         reads=lambda i, kk: [("A", i, kk)])
     g.task_type(
         "sb",
-        space=lambda: ((kk, j) for kk in range(nb) for j in range(nb)),
+        space=IndexSpace(
+            lambda: ((kk, j) for kk in range(nb) for j in range(nb)),
+            lambda s: ((kk, j) for kk in slab_ks(grid(s)[0], grid(s)[1])
+                       for j in _res(q, grid(s)[2], nb)),
+            size=nb * nb),
         writes=lambda kk, j: ("B", kk, j),
         reads=lambda kk, j: [("B", kk, j)])
     g.task_type(
         "gemm",                                  # slab-local k-chain on P
-        space=lambda: ((i, kk, j) for i in range(nb)
-                       for kk in range(nb) for j in range(nb)),
+        space=IndexSpace(
+            lambda: ((i, kk, j) for i in range(nb)
+                     for kk in range(nb) for j in range(nb)),
+            lambda s: ((i, kk, j) for i in _res(q, grid(s)[1], nb)
+                       for kk in range(grid(s)[0] * kb,
+                                       (grid(s)[0] + 1) * kb)
+                       for j in _res(q, grid(s)[2], nb)),
+            size=nb ** 3),
         writes=lambda i, kk, j: ("P", i, j, slab(kk)),
         reads=lambda i, kk, j: [("P", i, j, slab(kk)),
                                 ("A", i, kk), ("B", kk, j)])
     g.task_type(
         "fin",                                   # close the slab's partial
-        space=lambda: ((i, j, l) for i in range(nb)
-                       for j in range(nb) for l in range(q)),
+        space=IndexSpace(
+            lambda: ((i, j, l) for i in range(nb)
+                     for j in range(nb) for l in range(q)),
+            lambda s: ((i, j, grid(s)[0]) for i in _res(q, grid(s)[1], nb)
+                       for j in _res(q, grid(s)[2], nb)),
+            size=nb * nb * q),
         writes=lambda i, j, l: ("Pf", i, j, l),
         reads=lambda i, j, l: [("P", i, j, l)])
     g.task_type(
         "red",                                   # C += Pf_l reduction chain
-        space=lambda: ((i, j, l) for i in range(nb)
-                       for j in range(nb) for l in range(q)),
+        space=IndexSpace(
+            lambda: ((i, j, l) for i in range(nb)
+                     for j in range(nb) for l in range(q)),
+            lambda s: (((i, j, l) for i in _res(q, grid(s)[1], nb)
+                        for j in _res(q, grid(s)[2], nb) for l in range(q))
+                       if grid(s)[0] == 0 else iter(())),
+            size=nb * nb * q),
         writes=lambda i, j, l: ("C", i, j),
         reads=lambda i, j, l: [("C", i, j), ("Pf", i, j, l)])
     return g

@@ -17,6 +17,6 @@ eager oracle. See docs/ptg_guide.md for the full guide and
 docs/architecture.md for the pipeline.
 """
 
-from .graph import Graph, LocalView, TaskType, checked_ptg
+from .graph import Graph, IndexSpace, LocalView, TaskType, checked_ptg
 
-__all__ = ["Graph", "LocalView", "TaskType", "checked_ptg"]
+__all__ = ["Graph", "IndexSpace", "LocalView", "TaskType", "checked_ptg"]

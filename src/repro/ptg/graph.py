@@ -81,8 +81,11 @@ class LocalView:
     ``stats`` quantifies the laziness (what `benchmarks/discovery_scaling`
     tracks): ``n_owned`` / ``n_halo`` scanned tasks, ``derived_edges``
     (edge-list entries stored — the peak, since derivation only appends),
-    ``n_relevant_blocks`` (blocks whose access state was tracked), and
-    ``n_tasks_global`` (index-space size, for the ratio columns).
+    ``n_relevant_blocks`` (blocks whose access state was tracked),
+    ``n_tasks_global`` (index-space size, for the ratio columns), and
+    ``pass1_scanned`` (tasks whose access functions pass 1 evaluated:
+    the whole space for an opaque callable, only the shard's strip for a
+    partitionable :class:`IndexSpace`).
     """
 
     def __init__(self, graph_name: str, shard: int, n_shards: int):
@@ -140,6 +143,56 @@ class LocalView:
                 f"{len(self.tasks)} owned, "
                 f"{self.stats.get('n_halo', 0)} halo, "
                 f"{self.stats.get('derived_edges', 0)} edges)")
+
+
+class IndexSpace:
+    """A typed, *partitionable* index space (or program sequence).
+
+    A plain callable space is opaque: :meth:`Graph.derive_local`'s pass 1
+    must evaluate every task's accesses across the whole program to find the
+    shard's strip — an O(global) term on every rank. An ``IndexSpace``
+    additionally knows its own structure (a grid, a triangular Cholesky
+    space, a width×depth task grid), so each shard enumerates **only its
+    strip** and pass 1 becomes O(owned).
+
+    - ``enum()``           — full enumeration, in this space's program
+      order (exactly what the plain callable did);
+    - ``owned(shard)``     — only the entries whose *task* lands on
+      ``shard`` under the graph's declared owner/mapping. Membership must
+      be exact (derive_local cross-checks each yielded task's shard and
+      raises on a stray); order is free — pass 1 only builds sets;
+    - ``size``             — optional total entry count (stats only).
+
+    Used either as a per-type ``space=`` (entries are index tuples) or as
+    the ``Graph.sequence`` program (entries are ``(type_name, *index)``).
+    ``enumerate_owned`` returns ``None`` when it cannot partition — e.g.
+    under an ``owner_map`` override rebalancing blocks arbitrarily — and
+    derivation falls back to the full scan (opaque-space behavior)."""
+
+    def __init__(self, enum: Callable[[], Iterable],
+                 owned: Callable[[int], Iterable],
+                 size: Optional[int] = None):
+        self._enum = enum
+        self._owned = owned
+        self._size = size
+
+    def __call__(self) -> Iterable:
+        return self._enum()
+
+    def enumerate_owned(self, shard: int,
+                        owner_map: Optional[Callable] = None
+                        ) -> Optional[Iterable]:
+        """Entries of ``shard``'s strip, or ``None`` when this space cannot
+        partition under ``owner_map`` (strips are derived from the graph's
+        *declared* owner; an override invalidates them)."""
+        if owner_map is not None:
+            return None
+        return self._owned(shard)
+
+    def __len__(self) -> int:
+        if self._size is None:
+            raise TypeError("IndexSpace declared without a size")
+        return self._size
 
 
 class TaskType:
@@ -341,6 +394,46 @@ class Graph:
         self._built = True
         return self
 
+    def _owned_program_iter(self, shard: int,
+                            owner_map: Optional[Callable[[B], int]]
+                            ) -> Optional[Iterable[Tuple[TaskType, Tuple]]]:
+        """Strip enumeration for :meth:`derive_local`'s pass 1: yield only
+        ``shard``'s owned ``(type, index)`` pairs, via the
+        :class:`IndexSpace` protocol. Returns ``None`` — meaning *fall back
+        to the full scan* — unless every space (or the sequence) is
+        partitionable under ``owner_map``."""
+        if self._sequence is not None:
+            own = getattr(self._sequence, "enumerate_owned", None)
+            if own is None:
+                return None
+            entries = own(shard, owner_map)
+            if entries is None:
+                return None
+
+            def gen():
+                for entry in entries:
+                    tname = entry[0]
+                    if tname not in self._types:
+                        raise ValueError(
+                            f"owned strip yielded unknown task type {tname!r}")
+                    yield self._types[tname], tuple(entry[1:])
+            return gen()
+        strips = []
+        for t in self._types.values():
+            own = getattr(t.space, "enumerate_owned", None)
+            if own is None:
+                return None
+            entries = own(shard, owner_map)
+            if entries is None:
+                return None
+            strips.append((t, entries))
+
+        def gen():
+            for t, entries in strips:
+                for idx in entries:
+                    yield t, idx if isinstance(idx, tuple) else (idx,)
+        return gen()
+
     # ------------------------------------------- lazy per-shard derivation
 
     def derive_local(self, shard: int,
@@ -365,14 +458,22 @@ class Graph:
         Why two passes: the halo block set (blocks owned tasks read) must
         be known *before* the scan — a halo block's last writer may precede
         the owned reader in program order, and a single pass would have
-        skipped it. Pass 1 therefore evaluates only ``writes`` globally
-        (+ ``reads`` for owned tasks) to fix the relevant-block set; pass 2
-        runs the restricted scan. Correctness of the restriction: every
-        edge incident to an owned task flows through a block that is
-        relevant here (the task's written block, a block it reads, or an
-        owned block a remote task touches), and no owned task ever touches
-        an irrelevant block — so the per-block state trajectories, and
-        hence the derived edges, match the global scan exactly.
+        skipped it. Pass 1 therefore fixes the owned-task and relevant-block
+        sets; pass 2 runs the restricted scan. Correctness of the
+        restriction: every edge incident to an owned task flows through a
+        block that is relevant here (the task's written block, a block it
+        reads, or an owned block a remote task touches), and no owned task
+        ever touches an irrelevant block — so the per-block state
+        trajectories, and hence the derived edges, match the global scan
+        exactly.
+
+        Pass 1's cost depends on the space: an opaque callable space forces
+        the full O(global) relevance filter (evaluate every task's
+        ``writes`` to test ownership), but a partitionable
+        :class:`IndexSpace` lets the shard enumerate **only its strip** —
+        O(owned) — and the filter disappears (``stats["pass1_scanned"]``
+        records which happened). A strip entry mapping to the wrong shard
+        raises immediately: a silently wrong strip would drop edges.
         """
         owner = owner_map if owner_map is not None else self.owner
         n = self.n_shards
@@ -382,17 +483,37 @@ class Graph:
         owned_keys: set = set()
         extra_blocks: set = set()   # halo blocks + override-written blocks
         n_global = 0
-        for t, idx in self._program_iter():
-            n_global += 1
-            blk_w = t.writes(*idx)
-            t_shard = (t.mapping(*idx) if t.mapping is not None
-                       else owner(blk_w)) % n
-            if t_shard != shard:
-                continue
-            owned_keys.add(t.key_of(idx))
-            extra_blocks.add(blk_w)  # covers mapping-override ownership
-            if t.reads is not None:
-                extra_blocks.update(t.reads(*idx))
+        pass1_scanned = 0
+        strip = self._owned_program_iter(shard, owner_map)
+        if strip is not None:
+            for t, idx in strip:
+                pass1_scanned += 1
+                blk_w = t.writes(*idx)
+                t_shard = (t.mapping(*idx) if t.mapping is not None
+                           else owner(blk_w)) % n
+                if t_shard != shard:
+                    raise ValueError(
+                        f"index-space strip for shard {shard} yielded task "
+                        f"{t.key_of(idx)!r} mapped to shard {t_shard} — the "
+                        "space's enumerate_owned disagrees with the owner "
+                        "mapping")
+                owned_keys.add(t.key_of(idx))
+                extra_blocks.add(blk_w)
+                if t.reads is not None:
+                    extra_blocks.update(t.reads(*idx))
+        else:
+            for t, idx in self._program_iter():
+                n_global += 1
+                pass1_scanned += 1
+                blk_w = t.writes(*idx)
+                t_shard = (t.mapping(*idx) if t.mapping is not None
+                           else owner(blk_w)) % n
+                if t_shard != shard:
+                    continue
+                owned_keys.add(t.key_of(idx))
+                extra_blocks.add(blk_w)  # covers mapping-override ownership
+                if t.reads is not None:
+                    extra_blocks.update(t.reads(*idx))
 
         def rel(blk: B) -> bool:
             return blk in extra_blocks or owner(blk) % n == shard
@@ -407,7 +528,9 @@ class Graph:
         scanned: set = set()
         derived_edges = 0
 
+        n_pass2 = 0
         for pos, (t, idx) in enumerate(self._program_iter()):
+            n_pass2 += 1
             k = t.key_of(idx)
             owned = k in owned_keys
             blk_w = t.writes(*idx)
@@ -478,9 +601,14 @@ class Graph:
         view.stats = {
             "n_owned": len(view.tasks),
             "n_halo": len(scanned) - len(view.tasks),
-            "n_tasks_global": n_global,
+            "n_tasks_global": n_global or n_pass2,
             "derived_edges": derived_edges,
             "n_relevant_blocks": len(set(last_writer) | set(readers)),
+            # tasks whose access functions pass 1 actually evaluated:
+            # == n_tasks_global for an opaque space (the O(global)
+            # relevance filter), == n_owned-ish for a partitionable
+            # IndexSpace strip — the ratio discovery_scaling tracks.
+            "pass1_scanned": pass1_scanned,
         }
         return view
 

@@ -1,0 +1,73 @@
+"""Guard for the conftest hypothesis stand-in (slim CI images).
+
+The stub's strategy surface must cover every ``st.<name>`` the test suite
+actually uses — checked statically so the guard holds whether or not the
+real hypothesis is installed — and a strategy the stub does NOT provide
+must fail loudly at the use site, never collect as a silent no-op.
+"""
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# look-behind keeps `pytest.raises(...)` etc. from matching: only a bare
+# `st.` counts, not `<anything>st.` or `x.st.`
+ST_USE = re.compile(r"(?<![\w.])st\.(\w+)")
+
+
+def _stubbed_names():
+    src = (REPO / "conftest.py").read_text()
+    return set(re.findall(r"st_mod\.(\w+) = ", src)) - {"__getattr__"}
+
+
+def _used_names():
+    # this file deliberately mentions an unstubbed strategy in a code
+    # literal below — exclude it from the audit
+    return {name
+            for path in (REPO / "tests").glob("test_*.py")
+            if path.name != Path(__file__).name
+            for name in ST_USE.findall(path.read_text())}
+
+
+def test_stub_surface_covers_suite_usage():
+    stubbed = _stubbed_names()
+    assert stubbed, "could not parse the stub surface out of conftest.py"
+    used = _used_names()
+    assert used, "could not find any st.<strategy> usage to audit"
+    assert used <= stubbed, (
+        f"tests use unstubbed hypothesis strategies {sorted(used - stubbed)}; "
+        "extend the stand-in in conftest.py")
+
+
+def test_stub_has_no_dead_surface():
+    """Every stubbed strategy is actually exercised by some test — dead
+    stub code is untested code that rots."""
+    assert _stubbed_names() <= _used_names()
+
+
+def test_stub_fails_loudly_on_unstubbed_strategy():
+    """With hypothesis truly absent, asking the stub for a strategy it
+    doesn't provide must raise at the attribute lookup with a pointer to
+    conftest.py (run in a subprocess so this works regardless of whether
+    the real package is installed here)."""
+    code = (
+        "import sys; sys.modules['hypothesis'] = None\n"
+        "exec(open('conftest.py').read())\n"
+        "import hypothesis\n"
+        "assert getattr(hypothesis, '_is_repro_stub', False)\n"
+        "from hypothesis import strategies as st\n"
+        "assert st.integers(min_value=0, max_value=3) is not None\n"
+        "try:\n"
+        "    st.floats\n"
+        "except AttributeError as e:\n"
+        "    assert 'not stubbed' in str(e), e\n"
+        "    print('LOUD OK')\n"
+        "else:\n"
+        "    raise SystemExit('unstubbed strategy did not raise')\n"
+    )
+    proc = subprocess.run([sys.executable, "-c", code], cwd=REPO,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stderr
+    assert "LOUD OK" in proc.stdout

@@ -77,6 +77,38 @@ def test_flash_attention_matches_oracle_on_long_seq():
                                rtol=2e-5, atol=2e-5)
 
 
+# ---------------------------------------------------- task-body wrappers
+
+def test_task_matmul_vmaps_to_fused_grid():
+    """`task_matmul` is the executor's per-task body form: vmapping it (what
+    the wavefront compute step does over the task table) folds the batch
+    into a leading pallas grid dimension and still matches the oracle."""
+    from repro.kernels.block_gemm.ops import task_matmul
+
+    keys = jax.random.split(jax.random.key(9), 2)
+    a = _rand(keys[0], (5, 16, 16), jnp.float32)
+    b = _rand(keys[1], (5, 16, 16), jnp.float32)
+    got = jax.vmap(task_matmul)(a, b)
+    np.testing.assert_allclose(got, jnp.einsum("bij,bjk->bik", a, b),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_task_attention_matches_ref(causal):
+    """2D-block single-head attention body vs the jnp oracle, including
+    under vmap (the executor's batching over a wavefront's task table)."""
+    from repro.kernels.flash_attention.ops import task_attention
+
+    keys = jax.random.split(jax.random.key(10), 3)
+    q = _rand(keys[0], (3, 32, 16), jnp.float32)
+    k = _rand(keys[1], (3, 32, 16), jnp.float32)
+    v = _rand(keys[2], (3, 32, 16), jnp.float32)
+    got = jax.vmap(lambda q_, k_, v_: task_attention(
+        q_, k_, v_, causal=causal))(q, k, v)
+    want = mha_ref(q[:, None], k[:, None], v[:, None], causal=causal)[:, 0]
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
 # -------------------------------------------------------- decode_attention
 
 @pytest.mark.parametrize("b,hq,hkv,s,d,bs", [

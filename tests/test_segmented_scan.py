@@ -172,18 +172,43 @@ def test_plan_deep_sparse_segments():
     assert seg["wire_efficiency"] >= 0.9 * auto["wire_efficiency"]
 
 
-def test_plan_deep_fragmented_falls_back_loudly(caplog):
+def test_plan_deep_fragmented_takes_union_cover():
     """fft's stride cycling gives every wavefront a different ppermute
-    signature: too fragmented to segment, so the policy falls back to the
-    dense scan — explicitly (discards=True + a logged warning), never
-    silently. Also exercises ragged shapes: the fft run list contains
-    single-wavefront segments."""
+    signature: too fragmented to segment *exactly* — but the union
+    permutation cover folds the whole sparse run into a handful of scans,
+    so the policy keeps the sparse wire instead of warning-and-falling-back
+    to the dense scan. Also exercises ragged shapes: the exact fft run list
+    contains single-wavefront segments."""
     prog = _taskbench("fft", 16, 70, 8)
     plan = prog.plan_lowering(unroll_cap=64)
+    assert plan["mode"] == "union_cover"
+    assert plan["cover"] == "union"
+    assert not plan["discards"]
+    assert plan["n_segments"] > 64            # exact cover fragments...
+    assert plan["n_segments_union"] <= 4      # ...the union cover does not
+    assert (plan["wire_efficiency_union"]
+            > plan["wire_efficiency_dense_scan"])
+    assert any(e - s == 1 for s, e in prog.segments("auto"))
+
+    # every wavefront's pairs are spanned by its union segment's rounds
+    # (realization would raise otherwise), and the padding is accounted:
+    # union wire >= exact wire, same payload
+    union = prog.comm_stats(comm="auto", segmented=True, cover="union")
+    exact = prog.comm_stats(comm="auto")
+    assert union["real_bytes"] == exact["real_bytes"]
+    assert union["total_wire_bytes"] >= exact["total_wire_bytes"]
+    assert union["n_segments"] == plan["n_segments_union"]
+
+
+def test_plan_hopeless_fragmentation_falls_back_loudly(caplog):
+    """When even the union cover cannot fit the segment cap, the policy
+    still falls back to the dense scan — explicitly (discards=True + a
+    logged warning), never silently."""
+    prog = _taskbench("fft", 16, 70, 8)
+    plan = prog.plan_lowering(unroll_cap=64, segment_cap=0)
     assert plan["mode"] == "dense_scan"
     assert plan["discards"]
     assert "fragmented" in plan["reason"]
-    assert any(e - s == 1 for s, e in prog.segments("auto"))
 
     # auto_executor logs the discard before touching the mesh; a 1-device
     # mesh then fails the shard-count check, which is fine — the warning
@@ -191,7 +216,7 @@ def test_plan_deep_fragmented_falls_back_loudly(caplog):
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("shards",))
     with caplog.at_level(logging.WARNING, logger="repro.core.schedule"):
         with pytest.raises(ValueError, match="shards"):
-            prog.auto_executor({}, mesh, unroll_cap=64)
+            prog.auto_executor({}, mesh, unroll_cap=64, segment_cap=0)
     assert any("DISCARDING" in r.message for r in caplog.records)
 
 
