@@ -1,0 +1,84 @@
+"""Recovery-cost benchmark: what a fault costs the host runtime.
+
+The ISSUE's framing (via the Task Bench methodology and the Charm++/HPX
+overhead study): robustness features must be *measured*, not just
+asserted. This module runs the 8-rank Cholesky host run under three
+seeded fault plans and emits the recovery trajectory into ``BENCH_*.json``:
+
+- ``loss10`` / ``dup10`` — 10% message loss / duplication, no deaths:
+  the reliable layer's steady-state overhead (``retries``,
+  ``dup_suppressed``); the result must stay bit-identical, so the row
+  doubles as an end-to-end check.
+- ``kill1`` — the acceptance scenario: 10% loss + 10% duplication + one
+  mid-run rank kill. Emits ``recovery_seconds`` (death declared -> back
+  to quiescence) and ``rederived_frac`` (re-derived edge entries after
+  the death / full eager edge entries — the lazy-discovery payoff:
+  adoption re-derives only the moved shard, so this should track
+  ~1/n_shards + halo, not O(global)). ``rederived_frac`` is
+  deterministic for a given plan seed and is guarded by CI via
+  ``check_regression.py --metric rederived_frac:lower``;
+  ``recovery_seconds`` is a timing and stays unguarded.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _cholesky_case():
+    from repro.linalg.cholesky import (cholesky_bodies, cholesky_graph,
+                                       make_spd_blocks)
+
+    nb, b, pr, pc = 6, 4, 4, 2
+    g = cholesky_graph(nb, pr, pc, b)
+    blocks, _ = make_spd_blocks(nb, b, seed=0)
+    return g, blocks, cholesky_bodies()
+
+
+def _check_identical(ref, out, tag):
+    if set(out) != set(ref):
+        raise AssertionError(f"{tag}: block set diverged under faults")
+    for k in ref:
+        if not np.array_equal(np.asarray(ref[k]), np.asarray(out[k])):
+            raise AssertionError(f"{tag}: block {k} not bit-identical")
+
+
+def run(report) -> None:
+    from repro.core import FaultPlan
+
+    g, blocks, bodies = _cholesky_case()
+    ref = g.run_host(dict(blocks), bodies, n_threads=2)
+
+    plans = [
+        ("loss10", FaultPlan(seed=5, drop=0.10)),
+        ("dup10", FaultPlan(seed=5, duplicate=0.10)),
+        ("kill1", FaultPlan(seed=5, drop=0.10, duplicate=0.10,
+                            kill={3: 2})),
+    ]
+    for tag, plan in plans:
+        t0 = time.perf_counter()
+        out, rep = g.run_host(dict(blocks), bodies, n_threads=2,
+                              faults=plan, timeout=120.0)
+        wall = time.perf_counter() - t0
+        _check_identical(ref, out, tag)
+        extra = {
+            "retries": rep.retries,
+            "injected_drops": rep.injected_drops,
+            "injected_dups": rep.injected_dups,
+            "dup_suppressed": rep.dup_suppressed,
+            "deaths": list(rep.deaths),
+        }
+        derived = f"retries={rep.retries}"
+        if rep.deaths:
+            extra.update(
+                recovery_seconds=round(rep.recovery_seconds, 4),
+                rederived_frac=round(rep.rederived_frac, 4),
+                rederived_shards=list(rep.rederived_shards),
+                reexecuted_tasks=rep.reexecuted_tasks,
+                replayed_sends=rep.replayed_sends,
+            )
+            derived = (f"recovery={rep.recovery_seconds:.3f}s "
+                       f"rederived_frac={rep.rederived_frac:.3f}")
+        report(f"recovery/cholesky8_{tag}", wall * 1e6, derived, extra)

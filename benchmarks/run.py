@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
                      discovery -> comm_plan -> executor, wire efficiency
   discovery_scaling  graph-build cost: lazy per-shard derivation (owned +
                      halo) vs the eager global scan, edge_frac guarded
+  recovery           fault-recovery cost: Cholesky under seeded loss/dup/
+                     rank-kill plans; recovery_seconds + rederived_frac
+                     (guarded lower) from the RecoveryReport
   roofline           §Roofline (reads reports/dryrun JSONs)
 
 ``--json [PATH]`` additionally writes a ``BENCH_<utc>.json`` artifact with
@@ -72,7 +75,7 @@ def main() -> None:
 
     from benchmarks import (cholesky_scaling, discovery_scaling,
                             gemm_scaling, micro_deps, micro_overhead,
-                            roofline, taskbench_scaling)
+                            recovery, roofline, taskbench_scaling)
 
     modules = {
         "micro_overhead": micro_overhead,
@@ -81,6 +84,7 @@ def main() -> None:
         "cholesky_scaling": cholesky_scaling,
         "taskbench_scaling": taskbench_scaling,
         "discovery_scaling": discovery_scaling,
+        "recovery": recovery,
         "roofline": roofline,
     }
     if args.only:

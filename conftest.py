@@ -5,10 +5,21 @@ package is absent (slim CI images): ``@given`` replays a fixed number of
 pseudo-random examples seeded by the test name, so the property tests still
 collect and exercise the invariants. With hypothesis installed this module
 is a no-op and the real engine runs.
+
+Also implements the CI ``chaos-smoke`` legs: with ``REPRO_CHAOS=loss`` or
+``REPRO_CHAOS=dup`` in the environment, every ``run_ranks`` call that does
+not already carry a fault plan gets a seeded 10% drop / duplication plan
+injected — the whole host-runtime suite then runs on a lossy transport and
+must still pass unchanged (reliable delivery is invisible to correct
+callers). The per-run RecoveryReports are accumulated and written as a JSON
+artifact (``REPRO_CHAOS_OUT``, default ``chaos_report.json``) at session
+end.
 """
 
 import functools
 import inspect
+import json
+import os
 import random
 import sys
 import types
@@ -88,3 +99,45 @@ except ImportError:  # pragma: no cover — exercised only on slim images
 
     sys.modules["hypothesis"] = hyp_mod
     sys.modules["hypothesis.strategies"] = st_mod
+
+
+_CHAOS = os.environ.get("REPRO_CHAOS")
+_chaos_reports = []
+
+if _CHAOS in ("loss", "dup"):
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.abspath(__file__)), "src"))
+    import repro.core as _core
+    import repro.core.runtime as _core_runtime
+    from repro.core.faults import FaultPlan as _ChaosPlan
+
+    _orig_run_ranks = _core_runtime.run_ranks
+
+    def _chaos_run_ranks(n_ranks, main, **kw):
+        # never override an explicit plan (the fault tests drive their
+        # own schedules), and single-rank worlds have no transport
+        if kw.get("faults") is not None or n_ranks < 2:
+            return _orig_run_ranks(n_ranks, main, **kw)
+        kw["faults"] = _ChaosPlan(
+            seed=20260808,
+            drop=0.10 if _CHAOS == "loss" else 0.0,
+            duplicate=0.10 if _CHAOS == "dup" else 0.0)
+        results, report = _orig_run_ranks(n_ranks, main, **kw)
+        _chaos_reports.append(report.to_dict())
+        return results
+
+    _core_runtime.run_ranks = _chaos_run_ranks
+    _core.run_ranks = _chaos_run_ranks
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _CHAOS and _chaos_reports:
+        out = os.environ.get("REPRO_CHAOS_OUT", "chaos_report.json")
+        agg = {}
+        for r in _chaos_reports:
+            for k, v in r.items():
+                if isinstance(v, (int, float)) and not isinstance(v, bool):
+                    agg[k] = agg.get(k, 0) + v
+        with open(out, "w") as f:
+            json.dump({"mode": _CHAOS, "runs": len(_chaos_reports),
+                       "totals": agg, "reports": _chaos_reports}, f, indent=2)

@@ -11,14 +11,17 @@ Compiled layer (TPU-native adaptation):
 """
 
 from .completion import CompletionDetector
-from .messages import ActiveMsg, Communicator, InProcWorld, view
+from .faults import FaultPlan, RecoveryReport
+from .messages import (ActiveMsg, Communicator, InProcWorld, RankKilled,
+                       WorldPoisoned, view)
 from .runtime import RankContext, run_ranks
 from .stf import READ, READWRITE, STFGraph, WRITE
 from .taskflow import Taskflow
 from .threadpool import Task, Threadpool
 
 __all__ = [
-    "ActiveMsg", "Communicator", "CompletionDetector", "InProcWorld",
-    "RankContext", "READ", "READWRITE", "STFGraph", "Task", "Taskflow",
-    "Threadpool", "WRITE", "run_ranks", "view",
+    "ActiveMsg", "Communicator", "CompletionDetector", "FaultPlan",
+    "InProcWorld", "RankContext", "RankKilled", "READ", "READWRITE",
+    "RecoveryReport", "STFGraph", "Task", "Taskflow", "Threadpool",
+    "WorldPoisoned", "WRITE", "run_ranks", "view",
 ]

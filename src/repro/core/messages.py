@@ -16,16 +16,32 @@ Semantics kept faithful to the paper:
   :class:`view` sent "directly" plus regular args, with the three-callback
   contract — receiver-side buffer allocation, receiver-side processing, and
   a sender-side completion hook that fires when the sender buffer is
-  reusable.
+  reusable (here: when the transport ack arrives, since the buffer must stay
+  live across retransmits).
 - The communicator counts *queued* and *processed* user AMs (``q_r``,
-  ``p_r``); protocol traffic (completion detection) is excluded, exactly as
-  required by §II-B3 step 1.
+  ``p_r``); protocol traffic (completion detection, acks, heartbeats,
+  retransmits) is excluded, exactly as required by §II-B3 step 1.
 
 The "network" here is :class:`InProcWorld`: one inbox per rank, with
-injectable per-message delivery delay and reordering so the completion
-protocol can be stress-tested adversarially. Semantically each rank is one
-MPI rank; the mapping to a real cluster is one process per node with this
-module's queues replaced by MPI_Isend/Iprobe/Irecv (the paper's transport).
+injectable per-message delivery delay and reordering, and — via
+:class:`~repro.core.faults.FaultPlan` — message loss, duplication, and rank
+kills, so the completion protocol can be stress-tested adversarially.
+
+On top of the lossy wire the communicator runs a **reliable delivery
+layer**: every non-ack message carries a per-``(src, dst)`` sequence number;
+the receiver acks each seq (acks themselves are unreliable) and
+deduplicates by ``(src, seq)`` with cumulative compaction; the sender keeps
+an unacked window per destination and retransmits on an exponential
+backoff, marking a destination SUSPECT after the retry budget (retransmits
+then continue at the capped interval — only the failure detector may
+*declare* a rank dead). Exactly-once accounting survives because ``q_r``
+counts a user AM once at first queue and ``p_r`` once at first (post-dedup)
+delivery; retransmits and duplicates touch neither counter.
+
+Semantically each rank is one MPI rank; the mapping to a real cluster is
+one process per node with this module's queues replaced by
+MPI_Isend/Iprobe/Irecv (the paper's transport) — the reliability protocol
+is transport-agnostic by construction.
 """
 
 from __future__ import annotations
@@ -35,10 +51,26 @@ import itertools
 import pickle
 import threading
 import time
-from dataclasses import dataclass
-from typing import Any, Callable, List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 import numpy as np
+
+from .faults import FaultPlan, RecoveryReport
+
+# Transport-level kinds that are themselves the reliability mechanism and so
+# ride the raw (lossy) wire without sequence numbers.
+ACK, HEARTBEAT = "ACK", "HB"
+_UNRELIABLE_KINDS = (ACK, HEARTBEAT)
+
+
+class WorldPoisoned(RuntimeError):
+    """Another rank failed; this rank aborts its join loop as a *victim*
+    (its own work is not the root cause and is not reported as such)."""
+
+
+class RankKilled(RuntimeError):
+    """Raised inside a rank that a :class:`FaultPlan` killed mid-run."""
 
 
 class view:
@@ -55,34 +87,120 @@ class view:
 class _Wire:
     """One message on the wire."""
 
-    kind: str          # "am" | "large_am" | protocol kinds
+    kind: str          # "am" | "large_am" | protocol kinds | ACK | HB
     src: int
     am_id: int = -1
     blob: bytes = b""          # pickled regular args
     raw: Optional[np.ndarray] = None  # large-AM view payload (no copy)
     meta: Any = None           # protocol payload
+    seq: int = -1              # reliable-stream seq per (src, dst); -1 = raw
 
 
 class InProcWorld:
-    """Per-rank inboxes + optional adversarial delivery (delay / reorder)."""
+    """Per-rank inboxes + adversarial delivery (delay / reorder / loss /
+    duplication / rank death)."""
 
-    def __init__(self, n_ranks: int, delay_fn: Optional[Callable[..., float]] = None):
+    def __init__(self, n_ranks: int,
+                 delay_fn: Optional[Callable[..., float]] = None,
+                 faults: Optional[FaultPlan] = None):
         self.n_ranks = n_ranks
         self.delay_fn = delay_fn
-        # Set when any rank dies: every other rank aborts instead of waiting
-        # forever inside the completion protocol.
+        self.faults = faults
+        self.report = RecoveryReport()
+        # Set when any rank *fails* (exception): every other rank aborts
+        # instead of waiting forever inside the completion protocol.
         self.poison = threading.Event()
         self._locks = [threading.Lock() for _ in range(n_ranks)]
         # Each inbox is a heap of (deliver_at, seq, wire).
         self._inboxes: List[list] = [[] for _ in range(n_ranks)]
         self._seq = itertools.count()
         self._fingerprints: List[list] = [[] for _ in range(n_ranks)]
+        # Fault machinery: killed ranks, per-rank user-AM send counts (kill
+        # triggers), per-edge RNG streams, per-rank shutdown flags (the
+        # post-SHUTDOWN ack linger; see Communicator.run_until_shutdown).
+        self.dead: Set[int] = set()
+        self._fault_lock = threading.Lock()
+        self._user_sent = [0] * n_ranks
+        self._edge_rng: Dict[tuple, Any] = {}
+        self._shutdown_flags = [False] * n_ranks
+
+    # ----------------------------------------------------------- fault hooks
+
+    def check_dead_or_kill(self, src: int) -> bool:
+        """Called once per *user AM first-send* from ``src``; counts it
+        against the kill plan. True => the rank is (now) dead and the send
+        must be abandoned."""
+        if src in self.dead:
+            return True
+        f = self.faults
+        if f is None or src not in f.kill:
+            return False
+        with self._fault_lock:
+            self._user_sent[src] += 1
+            fire = self._user_sent[src] >= f.kill[src] and src not in self.dead
+        if fire:
+            self.kill(src)
+        return src in self.dead
+
+    def kill(self, rank: int) -> None:
+        """Physically silence ``rank``: no message from it is ever delivered
+        again, its inbox is discarded, undelivered messages it already sent
+        are purged. Idempotent; safe from any thread."""
+        with self._fault_lock:
+            if rank in self.dead:
+                return
+            self.dead.add(rank)
+        for r in range(self.n_ranks):
+            with self._locks[r]:
+                if r == rank:
+                    self._inboxes[r].clear()
+                else:
+                    kept = [item for item in self._inboxes[r]
+                            if item[2].src != rank]
+                    if len(kept) != len(self._inboxes[r]):
+                        heapq.heapify(kept)
+                        self._inboxes[r] = kept
+        # a dead rank cannot object to shutdown
+        self._shutdown_flags[rank] = True
+
+    def flag_shutdown(self, rank: int) -> None:
+        self._shutdown_flags[rank] = True
+
+    def all_shutdown(self) -> bool:
+        return all(self._shutdown_flags)
+
+    # ------------------------------------------------------------- transport
 
     def send(self, dst: int, wire: _Wire) -> None:
-        delay = self.delay_fn(wire.src, dst, wire.kind) if self.delay_fn else 0.0
+        if wire.src in self.dead or dst in self.dead:
+            return  # crashed endpoints: silently fenced
+        duplicate = False
+        f = self.faults
+        if f is not None and (f.drop or f.duplicate):
+            with self._fault_lock:
+                rng = self._edge_rng.get((wire.src, dst))
+                if rng is None:
+                    rng = self._edge_rng[(wire.src, dst)] = f.edge_rng(
+                        wire.src, dst)
+                # always draw both so the stream stays aligned per edge
+                dropped = rng.random() < f.drop
+                duplicate = rng.random() < f.duplicate
+            if dropped:
+                self.report.bump("injected_drops")
+                return
+            if duplicate:
+                self.report.bump("injected_dups")
+        self._deliver(dst, wire)
+        if duplicate:
+            self._deliver(dst, wire)
+
+    def _deliver(self, dst: int, wire: _Wire) -> None:
+        delay = self.delay_fn(wire.src, dst, wire.kind) if self.delay_fn \
+            else 0.0
         deliver_at = time.monotonic() + delay
         with self._locks[dst]:
-            heapq.heappush(self._inboxes[dst], (deliver_at, next(self._seq), wire))
+            heapq.heappush(self._inboxes[dst],
+                           (deliver_at, next(self._seq), wire))
 
     def poll(self, rank: int) -> List[_Wire]:
         """Pop every message whose delivery time has arrived."""
@@ -124,13 +242,49 @@ class ActiveMsg:
     __call__ = send
 
 
+class _SeqSeen:
+    """Receiver-side dedup state for one source: every seq <= ``cum`` has
+    been delivered, plus the out-of-order set ``extra`` (compacted)."""
+
+    __slots__ = ("cum", "extra")
+
+    def __init__(self):
+        self.cum = -1
+        self.extra: Set[int] = set()
+
+    def first_delivery(self, seq: int) -> bool:
+        if seq <= self.cum or seq in self.extra:
+            return False
+        self.extra.add(seq)
+        while self.cum + 1 in self.extra:
+            self.cum += 1
+            self.extra.discard(self.cum)
+        return True
+
+
+@dataclass
+class _Pending:
+    """One unacked reliable message at the sender."""
+
+    wire: _Wire
+    attempts: int = 0
+    due: float = 0.0
+    on_ack: Optional[Callable[[], None]] = None
+
+
 class Communicator:
     """AM factory + transport endpoint for one rank (paper's Communicator).
 
     Maintains the three queues of §II-B2 (ready-to-send / in-flight sends /
     received-to-run); with the in-process transport the in-flight-send queue
-    collapses to the sender-completion callback list for large AMs.
+    is the per-destination unacked window of the reliable layer, and a large
+    AM's sender-completion callback fires when its ack arrives.
     """
+
+    # retry schedule used when no FaultPlan overrides it
+    _RETRY_BASE = 0.05
+    _RETRY_BUDGET = 10
+    _RETRY_CAP = 0.5
 
     def __init__(self, world: InProcWorld, rank: int):
         self.world = world
@@ -138,12 +292,33 @@ class Communicator:
         self.n_ranks = world.n_ranks
         self._registry: List[dict] = []
         self._send_lock = threading.Lock()
-        # Monotone counters over *user* AMs only (q_r / p_r of §II-B3).
+        # Monotone counters over *user* AMs only (q_r / p_r of §II-B3),
+        # plus per-peer splits so counts attributable to a dead rank can be
+        # excluded after a death declaration (epoch-fenced; see completion).
         self.queued_count = 0
         self.processed_count = 0
-        self._pending_sender_callbacks: List[Callable[[], None]] = []
+        self.queued_to = [0] * self.n_ranks
+        self.processed_from = [0] * self.n_ranks
+        self._adjust_q = 0
+        self._adjust_p = 0
+        self._counted_dead: Set[int] = set()
+        # reliable layer state
+        self._next_seq: Dict[int, Any] = {
+            d: itertools.count() for d in range(self.n_ranks)}
+        self._pending: Dict[int, Dict[int, _Pending]] = {
+            d: {} for d in range(self.n_ranks)}
+        self._seen: Dict[int, _SeqSeen] = {
+            s: _SeqSeen() for s in range(self.n_ranks)}
+        self.suspected: Set[int] = set()
+        f = world.faults
+        self._retry_base = f.retry_base if f else self._RETRY_BASE
+        self._retry_budget = f.retry_budget if f else self._RETRY_BUDGET
+        self._last_hb = 0.0
         self._tp = None
         self._detector = None  # attached by runtime for distributed join
+        # recovery hook: called as on_reconfigure(newly_dead, assignment,
+        # epoch) from the progress thread when a death is applied
+        self.on_reconfigure: Optional[Callable] = None
         self.shutdown = threading.Event()
 
     # ----------------------------------------------------------- factories
@@ -162,7 +337,8 @@ class Communicator:
         """Large AM (§II-A2a): ``alloc(*args)`` returns the receiver buffer the
         view is stored into (zero extra copy); ``fn(*args)`` processes it after
         arrival; ``complete()`` runs on the *sender* once its buffer is
-        reusable."""
+        reusable — i.e. when the transport ack arrives, since the buffer may
+        be retransmitted until then."""
         am_id = self.world.register_fingerprint(self.rank, f"lam:{fn.__name__}")
         self._registry.append({"fn": fn, "large": True, "alloc": alloc,
                                "complete": complete})
@@ -184,17 +360,71 @@ class Communicator:
                               for a in args)
             raw = None
         blob = pickle.dumps(plain)  # the paper's temporary serialization buffer
+        if self.world.check_dead_or_kill(self.rank):
+            raise RankKilled(f"rank {self.rank} killed by fault plan")
         with self._send_lock:
+            if dest in self.world.dead:
+                return  # fenced: never counted, never delivered
             self.queued_count += 1
-            self.world.send(dest, _Wire("large_am" if am.large else "am",
-                                        self.rank, am.am_id, blob, raw))
-            if am.large:
-                entry = self._registry[am.am_id]
-                self._pending_sender_callbacks.append(entry["complete"])
+            self.queued_to[dest] += 1
+            wire = _Wire("large_am" if am.large else "am",
+                         self.rank, am.am_id, blob, raw)
+            on_ack = self._registry[am.am_id]["complete"] if am.large else None
+            self._post_reliable(dest, wire, on_ack)
 
     def protocol_send(self, dest: int, kind: str, meta: Any) -> None:
-        """Completion-protocol traffic — excluded from q/p counts."""
+        """Completion-protocol traffic — excluded from q/p counts, but
+        riding the reliable layer (COUNT/REQUEST/... must survive loss)."""
+        with self._send_lock:
+            if self.rank in self.world.dead or dest in self.world.dead:
+                return
+            self._post_reliable(dest, _Wire(kind, self.rank, meta=meta), None)
+
+    def _post_reliable(self, dest: int, wire: _Wire,
+                       on_ack: Optional[Callable]) -> None:
+        """Assign a seq, record the unacked entry, first transmission.
+        Caller holds ``_send_lock``."""
+        wire.seq = next(self._next_seq[dest])
+        self._pending[dest][wire.seq] = _Pending(
+            wire, attempts=0, due=time.monotonic() + self._retry_base,
+            on_ack=on_ack)
+        self.world.send(dest, wire)
+
+    def _post_raw(self, dest: int, kind: str, meta: Any) -> None:
+        """Unsequenced transport traffic (acks, heartbeats)."""
         self.world.send(dest, _Wire(kind, self.rank, meta=meta))
+
+    # ------------------------------------------------------------- recovery
+
+    def drop_rank_counts(self, newly_dead: Sequence[int]) -> None:
+        """A death was declared: stop attributing traffic to the dead ranks.
+        Counter splits are frozen (the world fence stops post-death sends
+        before they are counted), so the one-shot adjustment here keeps the
+        *effective* counts consistent over the survivor set. Unacked sends
+        to the dead are abandoned (their large-AM buffers are reusable —
+        nothing will retransmit them)."""
+        callbacks: List[Callable] = []
+        with self._send_lock:
+            for d in newly_dead:
+                if d in self._counted_dead:
+                    continue
+                self._counted_dead.add(d)
+                self._adjust_q += self.queued_to[d]
+                self._adjust_p += self.processed_from[d]
+                abandoned = self._pending.get(d, {})
+                self._pending[d] = {}
+                self.suspected.discard(d)
+                callbacks.extend(p.on_ack for p in abandoned.values()
+                                 if p.on_ack)
+        for cb in callbacks:
+            cb()
+
+    def effective_counts(self):
+        """(q, p) over the *current survivor set* — raw monotone counters
+        minus everything queued-to / processed-from declared-dead ranks."""
+        with self._send_lock:
+            return (self.queued_count - self._adjust_q,
+                    self.processed_count - self._adjust_p)
 
     # ------------------------------------------------------------- progress
 
@@ -204,25 +434,90 @@ class Communicator:
     def attach_detector(self, detector) -> None:
         self._detector = detector
 
-    def progress(self) -> None:
+    def _maybe_heartbeat(self) -> None:
+        f = self.world.faults
+        if f is None or self._detector is None or self.rank == 0:
+            return
+        now = time.monotonic()
+        if now - self._last_hb >= f.heartbeat_every:
+            self._last_hb = now
+            self._post_raw(0, HEARTBEAT, None)
+
+    def _retransmit_due(self) -> None:
+        now = time.monotonic()
+        resend: List[_Wire] = []
+        dests: List[int] = []
+        with self._send_lock:
+            for dst, pend in self._pending.items():
+                if not pend or dst in self.world.dead:
+                    continue
+                for p in pend.values():
+                    if p.due > now:
+                        continue
+                    p.attempts += 1
+                    if p.attempts >= self._retry_budget and \
+                            dst not in self.suspected:
+                        # budget exhausted: report, keep retrying at the cap
+                        # (only the failure detector declares death)
+                        self.suspected.add(dst)
+                        self.world.report.note_suspect(dst)
+                    p.due = now + min(self._retry_base * (2 ** p.attempts),
+                                      self._RETRY_CAP)
+                    resend.append(p.wire)
+                    dests.append(dst)
+        for dst, wire in zip(dests, resend):
+            self.world.report.bump("retries")
+            self.world.send(dst, wire)
+
+    def _on_ack(self, src: int, seq: int) -> None:
+        with self._send_lock:
+            p = self._pending.get(src, {}).pop(seq, None)
+            self.suspected.discard(src)
+        if p is not None and p.on_ack is not None:
+            p.on_ack()  # large-AM sender buffer is reusable now
+
+    def progress(self, *, transport_only: bool = False) -> None:
         """One progress step of the main/MPI thread (§II-B2)."""
-        # Sender-side completions ("MPI_Test succeeded").
-        callbacks, self._pending_sender_callbacks = (
-            self._pending_sender_callbacks, [])
-        for cb in callbacks:
-            cb()
+        self._maybe_heartbeat()
+        self._retransmit_due()
         for wire in self.world.poll(self.rank):
+            if self._detector is not None:
+                # any traffic from a rank is proof of life, not just HBs
+                self._detector.on_heartbeat(wire.src)
+            if wire.kind == ACK:
+                self._on_ack(wire.src, wire.meta)
+                continue
+            if wire.kind == HEARTBEAT:
+                if self._detector is not None:
+                    self._detector.on_heartbeat(wire.src)
+                continue
+            if wire.seq >= 0:
+                # reliable delivery: always ack (acks are idempotent), then
+                # drop anything already delivered — retransmits and injected
+                # duplicates alike never reach the counters twice
+                self._post_raw(wire.src, ACK, wire.seq)
+                if not self._seen[wire.src].first_delivery(wire.seq):
+                    self.world.report.bump("dup_suppressed")
+                    continue
             if wire.kind == "am":
+                if transport_only:
+                    raise RuntimeError(
+                        "user AM arrived after local shutdown linger began")
                 entry = self._registry[wire.am_id]
                 entry["fn"](*pickle.loads(wire.blob))
                 self.processed_count += 1
+                self.processed_from[wire.src] += 1
             elif wire.kind == "large_am":
+                if transport_only:
+                    raise RuntimeError(
+                        "user AM arrived after local shutdown linger began")
                 entry = self._registry[wire.am_id]
                 args = pickle.loads(wire.blob)
                 buf = entry["alloc"](*args)
                 np.copyto(np.asarray(buf).reshape(-1), wire.raw.reshape(-1))
                 entry["fn"](*args)
                 self.processed_count += 1
+                self.processed_from[wire.src] += 1
             else:
                 self._detector.on_message(wire)
 
@@ -230,7 +525,8 @@ class Communicator:
         return self._tp is None or self._tp.quiescent()
 
     def run_until_shutdown(self) -> None:
-        """Main-thread loop: progress + completion detection until SHUTDOWN."""
+        """Main-thread loop: progress + completion detection until SHUTDOWN,
+        then an ack linger so no peer is left retransmitting into the void."""
         if self._detector is None:
             # Single-rank shared-memory mode: local quiescence == completion.
             while not (self.worker_idle() and not self._has_traffic()):
@@ -240,11 +536,60 @@ class Communicator:
             return
         while not self.shutdown.is_set():
             if self.world.poison.is_set():
-                raise RuntimeError("world poisoned: another rank failed")
+                raise WorldPoisoned("world poisoned: another rank failed")
+            if self.rank in self.world.dead:
+                raise RankKilled(f"rank {self.rank} killed by fault plan")
             self.progress()
             self._detector.step()
             time.sleep(10e-6)
+        self._drain_shutdown()
+
+    def _drain_shutdown(self) -> None:
+        """Post-SHUTDOWN linger: quiescence is proven, but transport-level
+        traffic (acks for our last sends, retransmits from peers whose acks
+        were lost) may still be in flight. Keep acking/retransmitting until
+        every rank has flagged that its unacked window is empty; a rank that
+        stopped cold here would leave peers retrying into the void until
+        their budgets exhausted."""
+        flagged = False
+        while True:
+            if self.world.poison.is_set():
+                return
+            self.progress(transport_only=True)
+            if not flagged and not self._has_unacked():
+                self.world.flag_shutdown(self.rank)
+                flagged = True
+            if flagged and self.world.all_shutdown():
+                return
+            time.sleep(20e-6)
+
+    def _has_unacked(self) -> bool:
+        with self._send_lock:
+            return any(pend and dst not in self.world.dead
+                       for dst, pend in self._pending.items())
 
     def _has_traffic(self) -> bool:
         with self.world._locks[self.rank]:
             return bool(self.world._inboxes[self.rank])
+
+    # ---------------------------------------------------------- diagnostics
+
+    def snapshot(self) -> dict:
+        """Last-known protocol state, for timeout forensics."""
+        with self._send_lock:
+            unacked = {d: len(p) for d, p in self._pending.items() if p}
+        q, p = self.effective_counts()
+        snap = {
+            "rank": self.rank,
+            "queued": self.queued_count,
+            "processed": self.processed_count,
+            "effective_q": q,
+            "effective_p": p,
+            "unacked": unacked,
+            "suspected": sorted(self.suspected),
+            "worker_quiescent": self.worker_idle(),
+            "shutdown": self.shutdown.is_set(),
+        }
+        if self._detector is not None:
+            snap["detector"] = self._detector.snapshot()
+        return snap

@@ -11,7 +11,20 @@ SPMD-style, exactly like the paper's example program::
 Each rank owns a main (comm) thread — which runs the user's ``main`` and
 then, inside ``tp.join()``, the progress + completion-detection loop — and
 ``n_threads`` worker threads. Delivery delay/reorder can be injected via
-``delay_fn`` to stress the completion protocol.
+``delay_fn``, and loss/duplication/rank-death via ``faults`` (a
+:class:`~repro.core.faults.FaultPlan`), to stress the completion protocol;
+with ``faults`` set, ``run_ranks`` returns ``(results, RecoveryReport)``.
+
+Failure semantics:
+
+- a rank killed by the fault plan simply stops (its result is ``None``;
+  survivors recover via the membership protocol in ``core.completion``);
+- a rank that *raises* poisons the world; the other ranks abort as victims
+  and the **root cause** is re-raised with its full formatted traceback —
+  not the victims' "world poisoned" echoes;
+- a timeout raises with a per-rank forensic dump: which ranks are stuck and
+  each stuck rank's last protocol state (counters, unacked sends, detector
+  epoch/confirmations) instead of a bare TimeoutError.
 
 On a real cluster this module is replaced 1:1 by MPI (the transport is
 isolated behind ``InProcWorld``); everything above it is transport-agnostic.
@@ -20,11 +33,14 @@ isolated behind ``InProcWorld``); everything above it is transport-agnostic.
 from __future__ import annotations
 
 import threading
+import time
+import traceback
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 from .completion import CompletionDetector
-from .messages import Communicator, InProcWorld
+from .faults import FaultPlan, RecoveryReport
+from .messages import Communicator, InProcWorld, RankKilled, WorldPoisoned
 from .taskflow import Taskflow
 from .threadpool import Threadpool
 
@@ -51,25 +67,39 @@ def run_ranks(
     *,
     n_threads: int = 2,
     delay_fn: Optional[Callable[[int, int, str], float]] = None,
+    faults: Optional[FaultPlan] = None,
     timeout: float = 120.0,
-) -> list:
+):
     """SPMD-launch ``main`` on ``n_ranks`` emulated ranks; returns per-rank
-    results. Raises on per-rank exception or timeout (deadlock guard)."""
-    world = InProcWorld(n_ranks, delay_fn=delay_fn)
+    results (or ``(results, report)`` when ``faults`` is given). Raises on
+    per-rank exception or timeout (deadlock guard)."""
+    world = InProcWorld(n_ranks, delay_fn=delay_fn, faults=faults)
     results = [None] * n_ranks
     errors: list = []
+    ctxs: list = [None] * n_ranks
 
     def rank_main(rank: int) -> None:
         comm = Communicator(world, rank)
         tp = Threadpool(n_threads, comm)
         CompletionDetector(comm)
         ctx = RankContext(rank, n_ranks, comm, tp)
+        ctxs[rank] = ctx
         try:
             results[rank] = main(ctx)
+        except RankKilled:
+            # this rank was crashed by the fault plan: its silence is the
+            # point — survivors recover; nothing to report, nothing to keep
+            results[rank] = None
+            tp.abort()
+        except WorldPoisoned:
+            # victim of another rank's failure: abort quietly so the root
+            # cause below is the only error surfaced
+            tp.abort()
         except BaseException as e:  # surfaced to the caller
             errors.append((rank, e))
             comm.shutdown.set()
             world.poison.set()  # unblock every other rank's join()
+            tp.abort()
 
     threads = [
         threading.Thread(target=rank_main, args=(r,), daemon=True, name=f"rank{r}")
@@ -77,14 +107,41 @@ def run_ranks(
     ]
     for t in threads:
         t.start()
+    deadline = time.monotonic() + timeout
+    stuck = []
     for t in threads:
-        t.join(timeout=timeout)
+        t.join(timeout=max(0.0, deadline - time.monotonic()))
         if t.is_alive():
-            raise TimeoutError(
-                f"rank thread {t.name} did not finish within {timeout}s "
-                "(possible completion-protocol deadlock)"
-            )
+            stuck.append(t)
+    if stuck:
+        world.poison.set()  # let salvageable ranks unwind before reporting
+        raise TimeoutError(_timeout_forensics(stuck, ctxs, timeout))
     if errors:
         rank, err = errors[0]
-        raise RuntimeError(f"rank {rank} failed: {err!r}") from err
+        tb = "".join(traceback.format_exception(type(err), err,
+                                                err.__traceback__))
+        raise RuntimeError(f"rank {rank} failed:\n{tb}") from err
+    if faults is not None:
+        return results, world.report
     return results
+
+
+def _timeout_forensics(stuck, ctxs, timeout: float) -> str:
+    """Per-rank protocol state for the deadlock report: which ranks hung,
+    and what their communicator/detector last looked like."""
+    lines = [
+        f"{len(stuck)} rank thread(s) did not finish within {timeout}s "
+        "(possible completion-protocol deadlock):"
+    ]
+    for t in stuck:
+        rank = int(t.name.replace("rank", ""))
+        ctx = ctxs[rank]
+        if ctx is None:
+            lines.append(f"  rank {rank}: stuck before context creation")
+            continue
+        try:
+            snap = ctx.comm.snapshot()
+        except Exception as e:  # forensics must never mask the timeout
+            snap = f"<snapshot failed: {e!r}>"
+        lines.append(f"  rank {rank}: {snap}")
+    return "\n".join(lines)

@@ -109,3 +109,10 @@ class Taskflow(Generic[K]):
     def pending(self) -> int:
         """Number of partially-fulfilled (live) tasks — O(1) metadata check."""
         return sum(len(d) for d in self._deps)
+
+    def snapshot(self) -> dict:
+        """Live-task state for deadlock/timeout forensics: per-thread counts
+        of partially-fulfilled tasks (the only state the runtime holds)."""
+        per_thread = [len(d) for d in self._deps]
+        return {"name": self.name, "live": sum(per_thread),
+                "per_thread": per_thread}

@@ -144,6 +144,18 @@ class Threadpool:
         if self._errors:
             raise self._errors[0]
 
+    def abort(self) -> None:
+        """Hard-stop for a crashing rank (fault-plan kill or poisoned
+        world): discard every queued task and release the workers. The
+        in-flight accounting is deliberately left inconsistent — nobody
+        joins an aborted pool."""
+        self._shutdown.set()
+        self._started.set()
+        for q in self._queues:
+            with q.lock:
+                q.bound.clear()
+                q.stealable.clear()
+
     def quiescent(self) -> bool:
         """True iff no task is queued or running on this rank."""
         with self._inflight_lock:

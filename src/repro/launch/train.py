@@ -37,6 +37,20 @@ def main() -> None:
     ap.add_argument("--data", default=None)
     ap.add_argument("--ckpt-dir", default="ckpt")
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--elastic", action="store_true",
+                    help="run the heartbeat/straggler/re-mesh decision loop "
+                         "around the step loop: on a declared host failure "
+                         "the survivors re-mesh (model axis fixed, data "
+                         "axis shrunk) and restore the latest checkpoint")
+    ap.add_argument("--fake-hosts", type=int, default=0,
+                    help="with --elastic at dev scale: pretend the host "
+                         "devices are split across N hosts")
+    ap.add_argument("--kill-host", default=None, metavar="HOST@STEP",
+                    help="dev fault injection: fake host HOST stops "
+                         "heartbeating at STEP")
+    ap.add_argument("--lease", type=float, default=2.0,
+                    help="steps without a heartbeat before a host is "
+                         "declared dead (--elastic)")
     args = ap.parse_args()
 
     if args.host_devices:
@@ -44,10 +58,65 @@ def main() -> None:
             f"--xla_force_host_platform_device_count={args.host_devices}")
 
     import jax
-    import jax.numpy as jnp
 
     from repro.configs.base import reduced as reduce_cfg
     from repro.configs.registry import get_config
+    from repro.train.elastic import ElasticController
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    seq = args.seq or (128 if args.reduced else 4096)
+    global_batch = args.global_batch or (8 if args.reduced else 256)
+
+    all_devices = list(jax.devices())
+    controller = None
+    kill_host = kill_at = None
+    chips_per_host = len(all_devices)
+    if args.elastic:
+        if args.pipeline > 1:
+            sys.exit("--elastic does not compose with --pipeline yet")
+        fake_hosts = args.fake_hosts or 1
+        if len(all_devices) % fake_hosts:
+            sys.exit(f"--fake-hosts {fake_hosts} does not divide "
+                     f"{len(all_devices)} devices")
+        chips_per_host = len(all_devices) // fake_hosts
+        controller = ElasticController(
+            n_hosts=fake_hosts, chips_per_host=chips_per_host,
+            model_axis=max(1, min(4, chips_per_host)),
+            dead_after=args.lease)
+        if args.kill_host:
+            kh, ka = args.kill_host.split("@")
+            kill_host, kill_at = int(kh), int(ka)
+
+    devices = list(all_devices)
+    shape_override = None  # set by a re-mesh plan after a host failure
+    end = None  # absolute final step, fixed across re-meshes
+
+    while True:
+        plan, end = _run_epoch(args, cfg, seq, global_batch, devices,
+                               shape_override, controller, kill_host,
+                               kill_at, end)
+        if plan is None:
+            break
+        devices = [all_devices[h * chips_per_host + c]
+                   for h in plan.survivors for c in range(chips_per_host)]
+        shape_override = plan.mesh_shape
+
+
+def _run_epoch(args, cfg, seq, global_batch, devices, shape_override,
+               controller, kill_host, kill_at, end):
+    """One mesh-lifetime of the step loop. Returns ``(plan, end)``:
+    ``plan`` is None on normal completion, else the ElasticPlan that
+    triggered a re-mesh (the caller rebuilds the survivor mesh and calls
+    again; restore-from-checkpoint happens on the way back in)."""
+    import sys
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
     from repro.dist.ctx import set_batch_axes, set_seq_shard, use_mesh
     from repro.dist.sharding import (batch_axis, named_shardings,
                                      param_specs, sanitize_specs)
@@ -60,14 +129,11 @@ def main() -> None:
                                         make_pipeline_train_step,
                                         make_train_step)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = reduce_cfg(cfg)
-    seq = args.seq or (128 if args.reduced else 4096)
-    global_batch = args.global_batch or (8 if args.reduced else 256)
-
-    n_dev = len(jax.devices())
-    if args.pipeline > 1:
+    n_dev = len(devices)
+    if shape_override is not None:
+        mesh = jax.sharding.Mesh(
+            np.array(devices).reshape(shape_override), ("data", "model"))
+    elif args.pipeline > 1:
         # stage parallelism: ("pipe", "data", "model") — the ROADMAP's
         # pipeline_apply wiring; stage graph from the unified PTG builder
         from repro.models.transformer import layer_kinds
@@ -85,8 +151,11 @@ def main() -> None:
     elif n_dev >= 256:
         mesh = make_production_mesh()
     else:  # dev-scale mesh of the same shape family
-        model = max(1, min(4, n_dev))
-        mesh = jax.make_mesh((n_dev // model, model), ("data", "model"))
+        model = (controller.model_axis if controller is not None
+                 else max(1, min(4, n_dev)))
+        mesh = jax.sharding.Mesh(
+            np.array(devices).reshape(n_dev // model, model),
+            ("data", "model"))
     print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))}, "
           f"arch={cfg.name} ({cfg.n_params() / 1e9:.2f}B params), "
           f"seq={seq} batch={global_batch}")
@@ -155,23 +224,40 @@ def main() -> None:
                 donate_argnums=(0, 1))
         saver = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3)
         monitor = StragglerDetector()
+        if end is None:
+            end = start + args.steps
 
-        for step in range(start, start + args.steps):
+        for step in range(start, end):
             t0 = time.time()
             batch = {k: jnp.asarray(v) for k, v in ds.batch_at(step).items()}
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             dt = time.time() - t0
             monitor.record(0, dt)  # per-host on a real cluster
-            if step % 10 == 0 or step == start + args.steps - 1:
+            if step % 10 == 0 or step == end - 1:
                 print(f"step {step:6d}  loss {float(metrics['loss']):8.4f}  "
                       f"|g| {float(metrics['grad_norm']):8.3f}  "
                       f"{global_batch * seq / dt:10.0f} tok/s", flush=True)
             if step and step % args.ckpt_every == 0:
                 saver.save(step, {"params": params, "opt": opt_state})
-        saver.save(start + args.steps - 1,
-                   {"params": params, "opt": opt_state})
+            if controller is not None:
+                # fake-host heartbeats: one controller step == one train
+                # step (`now` is the step index, lease in steps). A real
+                # cluster beats with wall time from every host.
+                for h in controller.alive():
+                    if not (h == kill_host and step >= kill_at):
+                        controller.beat(h, dt, now=float(step))
+                plan = controller.poll(ckpt.latest_step(args.ckpt_dir),
+                                       now=float(step))
+                if plan is not None:
+                    print(f"host failure: survivors {plan.survivors}, "
+                          f"re-mesh {plan.mesh_shape}, restore step "
+                          f"{plan.restore_step}", flush=True)
+                    saver.wait()  # quiesce before tearing the mesh down
+                    return plan, end
+        saver.save(end - 1, {"params": params, "opt": opt_state})
         saver.wait()  # quiesce (completion rule) before exit
         print("done")
+    return None, end
 
 
 if __name__ == "__main__":

@@ -789,14 +789,29 @@ class Graph:
                              name=name or self.name)
 
     def run_host(self, blocks, bodies, *, n_threads: int = 2,
-                 timeout: float = 120.0):
+                 timeout: float = 120.0, faults=None):
         """Execute on the host TaskTorrent runtime (async tasks + active
         messages) across ``n_shards`` emulated ranks; returns the written
-        blocks gathered to the host."""
+        blocks gathered to the host.
+
+        With ``faults`` (a :class:`~repro.core.faults.FaultPlan`) the run
+        goes through the fault-tolerant host runtime and returns
+        ``(blocks, RecoveryReport)``: shard adoption after a declared death
+        re-runs :meth:`derive_local` for the moved shard only — the view's
+        ``derived_edges`` over the all-shards total is the report's
+        ``rederived_frac``, the measured lazy-recovery payoff."""
         from repro.linalg.host_exec import run_host_ptg
 
-        return run_host_ptg(self.to_block_spec(), blocks, bodies,
-                            n_threads=n_threads, timeout=timeout)
+        spec = self.to_block_spec()
+        if faults is None:
+            return run_host_ptg(spec, blocks, bodies,
+                                n_threads=n_threads, timeout=timeout)
+        total = sum(v.stats.get("derived_edges", 0)
+                    for v in self.local_views())
+        return run_host_ptg(spec, blocks, bodies,
+                            n_threads=n_threads, timeout=timeout,
+                            faults=faults, rederive=self.derive_local,
+                            total_edges=total)
 
     def __repr__(self) -> str:
         state = (f"{len(self._tasks)} tasks, {len(self._seeds)} seeds"

@@ -82,6 +82,53 @@ class ElasticPlan:
     restore_step: Optional[int]
 
 
+@dataclass
+class ElasticController:
+    """Live decision loop around a training step loop.
+
+    Each step every alive host calls :meth:`beat`; the controller (rank 0
+    in a real cluster) calls :meth:`poll` and gets an :class:`ElasticPlan`
+    back exactly when the failed set grows — i.e. when the survivor set
+    must re-mesh and restore. Hosts never heard from are not declared
+    dead (same rule as the runtime's failure detector: a lease only arms
+    once the host has proven alive), so a slow cold start is not a
+    failure. Deaths are cumulative: once failed, a host stays failed for
+    the life of the controller.
+    """
+
+    n_hosts: int
+    chips_per_host: int
+    model_axis: int
+    dead_after: float = 60.0
+
+    def __post_init__(self) -> None:
+        self.monitor = HeartbeatMonitor(self.n_hosts, self.dead_after)
+        self.stragglers = StragglerDetector()
+        self.failed: List[int] = []
+        self.plans: List[ElasticPlan] = []
+
+    def beat(self, host: int, step_time: Optional[float] = None,
+             now: Optional[float] = None) -> None:
+        self.monitor.beat(host, now)
+        if step_time is not None:
+            self.stragglers.record(host, step_time)
+
+    def alive(self) -> List[int]:
+        return [h for h in range(self.n_hosts) if h not in set(self.failed)]
+
+    def poll(self, latest_ckpt: Optional[int],
+             now: Optional[float] = None) -> Optional[ElasticPlan]:
+        newly = [h for h in self.monitor.dead_hosts(now)
+                 if h in self.monitor.last_seen and h not in set(self.failed)]
+        if not newly:
+            return None
+        self.failed.extend(newly)
+        plan = plan_remesh(self.n_hosts, self.failed, self.chips_per_host,
+                           self.model_axis, latest_ckpt)
+        self.plans.append(plan)
+        return plan
+
+
 def plan_remesh(n_hosts: int, failed: Sequence[int], chips_per_host: int,
                 model_axis: int, latest_ckpt: Optional[int]) -> ElasticPlan:
     """Largest (data × model) mesh that fits the survivor set, keeping the

@@ -1,0 +1,217 @@
+"""Fault tolerance: lossy transport, reliable delivery, rank-death recovery.
+
+The load-bearing property (tentpole acceptance): under ANY seeded
+drop/duplicate/reorder schedule, the completion protocol must never shut
+the world down while a user AM is undelivered (no early SHUTDOWN — the
+quiescence proof of §II-B3 must survive an unreliable transport), and the
+run must terminate within the retry budget (no hang) — 200 examples.
+
+Rank death goes further: a killed rank's shard is adopted by a survivor,
+re-derived lazily (only the moved shard), and re-executed from upstream
+block state; the result must be bit-identical to the fault-free run.
+"""
+
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import FaultPlan, run_ranks
+
+
+def _delay_fn(seed: float, max_delay: float):
+    rng = random.Random(seed)
+    lock = threading.Lock()
+
+    def fn(src, dst, kind):
+        with lock:
+            return rng.uniform(0.0, max_delay)
+
+    return fn
+
+
+# ------------------------ property: no early SHUTDOWN, no hang (200 ex)
+
+@settings(deadline=None, max_examples=200,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    n_ranks=st.integers(2, 4),
+    n_msgs=st.integers(1, 12),
+    seed=st.integers(0, 2**31),
+    drop=st.sampled_from([0.0, 0.05, 0.15, 0.3]),
+    dup=st.sampled_from([0.0, 0.05, 0.15, 0.3]),
+    max_delay=st.sampled_from([0.0, 0.001]),
+)
+def test_lossy_schedule_never_early_shutdown(n_ranks, n_msgs, seed, drop,
+                                             dup, max_delay):
+    """Rank 0 scatters AMs under seeded loss + duplication + reorder; at
+    shutdown every message must have been processed exactly once. A lost
+    message means SHUTDOWN fired while delivery was still owed (early
+    termination); a doubled one means receiver dedup failed; a hang means
+    the retry/ack loop does not terminate (caught by the timeout)."""
+    plan = FaultPlan(seed=seed, drop=drop, duplicate=dup)
+
+    def main(ctx):
+        received = []
+        am = ctx.comm.make_active_msg(lambda i: received.append(i))
+        if ctx.rank == 0:
+            for i in range(n_msgs):
+                am.send(1 + (i % (ctx.n_ranks - 1)), i)
+        ctx.tp.join()
+        return received
+
+    res, report = run_ranks(n_ranks, main, faults=plan, timeout=60.0,
+                            delay_fn=_delay_fn(seed, max_delay))
+    got = sorted(x for r in res for x in r)
+    assert got == list(range(n_msgs)), (
+        f"drop/dup schedule broke exactly-once delivery: {got} "
+        f"(report: {report.to_dict()})")
+
+
+# ----------------------------------------------- exactly-once accounting
+
+def test_counters_count_each_user_am_once_under_faults():
+    """q_r/p_r stay exact under heavy loss + duplication: retries and dup
+    deliveries are transport-level and must not leak into the §II-B3
+    counters (a leak would desynchronize the quiescence proof)."""
+    n_msgs = 40
+    plan = FaultPlan(seed=7, drop=0.3, duplicate=0.3)
+
+    def main(ctx):
+        am = ctx.comm.make_active_msg(lambda i: None)
+        if ctx.rank == 0:
+            for i in range(n_msgs):
+                am.send(1, i)
+        ctx.tp.join()
+        return ctx.comm.effective_counts()
+
+    res, report = run_ranks(2, main, faults=plan, timeout=60.0)
+    assert res[0] == (n_msgs, 0)
+    assert res[1] == (0, n_msgs)
+    assert report.retries > 0  # the plan actually dropped
+    assert report.injected_drops > 0
+
+
+def test_duplicates_suppressed_by_seq_dedup():
+    plan = FaultPlan(seed=3, drop=0.0, duplicate=0.5)
+
+    def main(ctx):
+        received = []
+        am = ctx.comm.make_active_msg(lambda i: received.append(i))
+        if ctx.rank == 0:
+            for i in range(30):
+                am.send(1, i)
+        ctx.tp.join()
+        return received
+
+    res, report = run_ranks(2, main, faults=plan, timeout=60.0)
+    assert sorted(res[1]) == list(range(30))
+    assert report.injected_dups > 0
+    assert report.dup_suppressed > 0
+
+
+# ------------------------------------------------------------ rank death
+
+def test_rank_death_declared_and_survivors_finish():
+    """Kill rank 2 after its 3rd user send: the lease detector must
+    declare the death, survivors must drain and shut down, and the killed
+    rank's result slot is None (it never returned)."""
+    plan = FaultPlan(seed=11, drop=0.05, duplicate=0.05, kill={2: 3})
+
+    def main(ctx):
+        received = []
+        am = ctx.comm.make_active_msg(lambda i: received.append(i))
+        if ctx.rank != 0:
+            for i in range(10):
+                am.send(0, ctx.rank * 100 + i)
+        ctx.tp.join()
+        return received
+
+    res, report = run_ranks(3, main, faults=plan, timeout=60.0)
+    assert res[2] is None  # killed mid-run
+    assert report.deaths == [2]
+    # rank 1 survives: its stream is delivered exactly once. Rank 2 died
+    # at its 3rd send (dropped mid-send; queued-but-undelivered wires are
+    # purged like a crashed process's socket buffer), so at most its first
+    # two sends arrive — and never as duplicates.
+    got = sorted(res[0])
+    assert [x for x in got if x < 200] == [100 + i for i in range(10)]
+    from_dead = [x for x in got if x >= 200]
+    assert set(from_dead) <= {200, 201}
+    assert len(from_dead) == len(set(from_dead))
+
+
+def test_fault_plan_validates():
+    with pytest.raises(ValueError):
+        FaultPlan(drop=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(kill={0: 2})  # rank 0 arbitrates; it cannot be killed
+
+
+# --------------------------------------- timeout forensics (runtime.py)
+
+def test_timeout_reports_stuck_ranks_with_protocol_state():
+    """A rank that never enters the completion protocol deadlocks the
+    world; the timeout must name the stuck ranks and include their
+    protocol snapshots instead of a bare 'timed out'."""
+
+    def main(ctx):
+        if ctx.rank == 1:
+            # block until the driver poisons the world (simulated wedge)
+            while not ctx.comm.world.poison.is_set():
+                time.sleep(0.002)
+        ctx.tp.join()
+
+    with pytest.raises(TimeoutError) as ei:
+        run_ranks(2, main, timeout=1.5)
+    msg = str(ei.value)
+    assert "deadlock" in msg
+    assert "rank 1" in msg
+    assert "queued" in msg  # communicator snapshot made it into the report
+
+
+def test_rank_exception_propagates_with_traceback():
+    def main(ctx):
+        if ctx.rank == 1:
+            raise ValueError("boom at rank 1")
+        ctx.tp.join()
+
+    with pytest.raises(RuntimeError) as ei:
+        run_ranks(2, main, timeout=30.0)
+    msg = str(ei.value)
+    assert "rank 1 failed" in msg
+    assert "ValueError: boom at rank 1" in msg
+    assert "in main" in msg  # the original traceback, not just the repr
+    assert isinstance(ei.value.__cause__, ValueError)
+
+
+# ------------------------------- acceptance: Cholesky kill + recovery
+
+def test_cholesky_bit_identical_under_loss_dup_and_kill():
+    """The ISSUE acceptance scenario: 10% loss + 10% duplication + one
+    mid-run rank kill on the 8-rank Cholesky host run. The result must be
+    bit-identical to the fault-free run, and re-derivation confined to the
+    moved shard (rederived_frac < 0.5)."""
+    from repro.linalg.cholesky import cholesky_bodies, cholesky_graph, \
+        make_spd_blocks
+
+    nb, b, pr, pc = 6, 4, 4, 2
+    g = cholesky_graph(nb, pr, pc, b)
+    blocks, _ = make_spd_blocks(nb, b, seed=0)
+    ref = g.run_host(dict(blocks), cholesky_bodies(), n_threads=2)
+
+    plan = FaultPlan(seed=5, drop=0.10, duplicate=0.10, kill={3: 2})
+    out, report = g.run_host(dict(blocks), cholesky_bodies(), n_threads=2,
+                             faults=plan, timeout=120.0)
+
+    assert set(out) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(ref[k]))
+    assert report.deaths == [3]
+    assert report.rederived_shards == [3]
+    assert report.rederived_frac is not None and report.rederived_frac < 0.5
+    assert report.reexecuted_tasks > 0
+    assert report.recovery_seconds is not None

@@ -110,6 +110,51 @@ def test_straggler_needs_persistence():
     assert 0 in s.stragglers()
 
 
+def test_elastic_controller_declares_death_once():
+    from repro.train.elastic import ElasticController
+
+    c = ElasticController(n_hosts=4, chips_per_host=2, model_axis=2,
+                          dead_after=2.0)
+    for step in range(3):
+        for h in range(4):
+            c.beat(h, 0.1, now=float(step))
+    assert c.poll(latest_ckpt=None, now=3.0) is None
+    # host 3 goes silent from step 3 on
+    for step in range(3, 7):
+        for h in range(3):
+            c.beat(h, 0.1, now=float(step))
+        plan = c.poll(latest_ckpt=10, now=float(step))
+        if step < 5:
+            assert plan is None  # lease not yet expired
+        elif step == 5:
+            assert plan is not None and plan.survivors == [0, 1, 2]
+            assert plan.restore_step == 10
+        else:
+            assert plan is None  # deaths are declared exactly once
+    assert c.failed == [3]
+    assert c.alive() == [0, 1, 2]
+
+
+def test_elastic_controller_ignores_never_seen_hosts():
+    """A host that never heartbeat is a slow cold start, not a failure
+    (same arming rule as the runtime's lease detector)."""
+    from repro.train.elastic import ElasticController
+
+    c = ElasticController(n_hosts=3, chips_per_host=1, model_axis=1,
+                          dead_after=1.0)
+    c.beat(0, now=4.5)
+    c.beat(1, now=4.5)
+    # host 2 has never beaten; even far past the lease it is not failed
+    assert c.poll(latest_ckpt=None, now=5.0) is None
+    assert c.failed == []
+    # but once it beats and then goes silent, the lease arms
+    c.beat(2, now=5.0)
+    c.beat(0, now=7.0)
+    c.beat(1, now=7.0)
+    plan = c.poll(latest_ckpt=None, now=7.0)
+    assert plan is not None and plan.survivors == [0, 1]
+
+
 def test_plan_remesh_shrinks_data_axis():
     plan = plan_remesh(n_hosts=64, failed=[3, 17], chips_per_host=4,
                        model_axis=16, latest_ckpt=1200)

@@ -75,3 +75,30 @@ def test_serve_greedy_decode(arch):
         assert tok.shape == (2,)
         assert np.isfinite(np.asarray(logits, np.float32)).all()
     assert int(cache.pos) == 4
+
+
+def test_elastic_launcher_survives_fake_host_kill(tmp_path):
+    """End-to-end --elastic path: 2 fake hosts on 4 host devices, host 1
+    stops heartbeating at step 5. The controller must declare the death,
+    the survivors must re-mesh (2x2 -> 1x2), restore the latest
+    checkpoint, and finish the remaining steps."""
+    import os
+    import subprocess
+    import sys
+
+    env = {**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"}
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train",
+         "--arch", "starcoder2-3b", "--reduced", "--steps", "8",
+         "--host-devices", "4", "--elastic", "--fake-hosts", "2",
+         "--kill-host", "1@5", "--lease", "2",
+         "--ckpt-dir", str(tmp_path / "ck"), "--ckpt-every", "3",
+         "--global-batch", "4", "--seq", "16"],
+        capture_output=True, text=True, timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = proc.stdout
+    assert "host failure: survivors [0], re-mesh (1, 2)" in out
+    assert "elastic restore from step" in out
+    assert out.count("mesh: ") == 2  # one mesh per epoch: before + after
+    assert "done" in out
