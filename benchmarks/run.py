@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   recovery           fault-recovery cost: Cholesky under seeded loss/dup/
                      rank-kill plans; recovery_seconds + rederived_frac
                      (guarded lower) from the RecoveryReport
+  scheduler_stream   resident multi-tenant scheduler: per-task overhead of
+                     the submission-stream path (sched_overhead_us) and
+                     retirement health (live_frac), both guarded lower
   roofline           §Roofline (reads reports/dryrun JSONs)
 
 ``--json [PATH]`` additionally writes a ``BENCH_<utc>.json`` artifact with
@@ -75,7 +78,8 @@ def main() -> None:
 
     from benchmarks import (cholesky_scaling, discovery_scaling,
                             gemm_scaling, micro_deps, micro_overhead,
-                            recovery, roofline, taskbench_scaling)
+                            recovery, roofline, scheduler_stream,
+                            taskbench_scaling)
 
     modules = {
         "micro_overhead": micro_overhead,
@@ -85,6 +89,7 @@ def main() -> None:
         "taskbench_scaling": taskbench_scaling,
         "discovery_scaling": discovery_scaling,
         "recovery": recovery,
+        "scheduler_stream": scheduler_stream,
         "roofline": roofline,
     }
     if args.only:

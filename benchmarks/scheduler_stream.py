@@ -1,0 +1,84 @@
+"""Scheduler-service stream benchmark: what the resident multi-tenant
+path costs on top of the one-shot runtime, and whether retirement keeps
+memory on the live frontier.
+
+Two rows, both through the full service (submission bus -> per-rank lazy
+assimilation via ``derive_local`` -> namespace binding -> retirement):
+
+- ``sched_stream/overhead`` — N concurrent clients x M submissions of a
+  Task-Bench stencil with near-empty bodies: wall time divided by total
+  tasks is ``sched_overhead_us``, the per-task cost of admission, bus
+  consumption, assimilation, fair ordering, fulfillment, and retirement
+  (the scheduler-side METG analogue). Guarded lower-is-better at the
+  loose ``--tol 1.0`` (it is a timing metric: only an
+  order-of-magnitude regression fails);
+- ``sched_stream/chained`` — one client streaming M submissions chained
+  through one namespace (each reads the previous one's final writes):
+  reports ``submissions_per_s`` and ``live_frac`` = blocks high-water /
+  blocks ever materialized. ``live_frac`` is the retirement guard
+  (deterministic up to watermark/assimilation races — guarded at the
+  loose tolerance): near 1.0 means the service is accumulating history
+  instead of retiring it.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.taskbench_scaling import (taskbench_blocks, taskbench_bodies,
+                                          taskbench_graph)
+
+N_SHARDS = 2
+WIDTH, DEPTH = 8, 6
+
+
+def _stream(n_clients: int, n_subs: int, bodies, *, chained: bool):
+    """Run the stream; returns (wall_seconds, total_tasks, stats)."""
+    import threading
+
+    from repro.sched import SchedulerService
+
+    blocks = taskbench_blocks(WIDTH, DEPTH, seed=11)
+    total_tasks = n_clients * n_subs * WIDTH * DEPTH
+    t0 = time.perf_counter()
+    with SchedulerService(N_SHARDS, timeout=300.0) as svc:
+        def client_thread(i: int) -> None:
+            c = svc.client(f"c{i}", weight=float(i + 1))
+            futs = []
+            for j in range(n_subs):
+                g, _ = taskbench_graph("stencil", WIDTH, DEPTH, N_SHARDS,
+                                       seed=11)
+                ns = None if chained else f"c{i}/{j}"
+                seed = blocks if (j == 0 or not chained) else {}
+                futs.append(c.submit(g, seed, bodies, namespace=ns))
+            for f in futs:
+                f.result(300.0)
+
+        threads = [threading.Thread(target=client_thread, args=(i,),
+                                    daemon=True) for i in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    wall = time.perf_counter() - t0
+    return wall, total_tasks, svc.stats()
+
+
+def run(report) -> None:
+    # near-empty bodies: the row measures the scheduler, not the math
+    noop_bodies = {name: (lambda *ops: ops[0])
+                   for name in taskbench_bodies()}
+    wall, n_tasks, stats = _stream(4, 6, noop_bodies, chained=False)
+    overhead_us = wall / n_tasks * 1e6
+    report("sched_stream/overhead", overhead_us,
+           f"{4}x{6} subs, {n_tasks} tasks",
+           extra={"sched_overhead_us": round(overhead_us, 3),
+                  "submissions_per_s": round(4 * 6 / wall, 2),
+                  "live_frac": round(stats["live_frac"], 4)})
+
+    wall, n_tasks, stats = _stream(1, 10, taskbench_bodies(), chained=True)
+    report("sched_stream/chained", wall / n_tasks * 1e6,
+           f"10 chained subs, live {stats['blocks_hwm']}/"
+           f"{stats['blocks_total']}",
+           extra={"submissions_per_s": round(10 / wall, 2),
+                  "live_frac": round(stats["live_frac"], 4)})

@@ -69,10 +69,19 @@ def run_ranks(
     delay_fn: Optional[Callable[[int, int, str], float]] = None,
     faults: Optional[FaultPlan] = None,
     timeout: float = 120.0,
+    serve_scheduler=None,
 ):
     """SPMD-launch ``main`` on ``n_ranks`` emulated ranks; returns per-rank
     results (or ``(results, report)`` when ``faults`` is given). Raises on
-    per-rank exception or timeout (deadlock guard)."""
+    per-rank exception or timeout (deadlock guard).
+
+    ``serve_scheduler`` (a :class:`repro.sched.SchedulerService`) switches
+    to resident mode: ranks stay alive between submissions for as long as
+    the service is open, so the deadlock deadline only arms once the
+    service's ``draining`` event is set (``close()`` sets it before
+    posting STOP) — an idle resident rank is not a hang. Everything else
+    (poison propagation, timeout forensics, error surfacing) is
+    unchanged."""
     world = InProcWorld(n_ranks, delay_fn=delay_fn, faults=faults)
     results = [None] * n_ranks
     errors: list = []
@@ -107,6 +116,10 @@ def run_ranks(
     ]
     for t in threads:
         t.start()
+    if serve_scheduler is not None:
+        while not serve_scheduler.draining.wait(timeout=0.25):
+            if world.poison.is_set() or errors:
+                break   # a rank died while serving: fall through and join
     deadline = time.monotonic() + timeout
     stuck = []
     for t in threads:

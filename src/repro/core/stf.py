@@ -28,6 +28,7 @@ READ, WRITE, READWRITE = "R", "W", "RW"
 class _Node:
     fn: Callable[[], None]
     indegree: int = 0
+    indegree0: int = 0  # as submitted — execution consumes `indegree`
     out: List["_Node"] = field(default_factory=list)
     priority: float = 0.0
     mapping: int = 0
@@ -73,22 +74,35 @@ class STFGraph:
                 self._readers_since_write[key] = []
             if mode in (READ, READWRITE):
                 self._readers_since_write.setdefault(key, []).append(node)
-        node.indegree = len(deps)
+        node.indegree = node.indegree0 = len(deps)
         self._nodes.append(node)
+
+    def reset(self) -> None:
+        """Restore every dependency counter to its submitted value so the
+        same DAG can execute again. The edge structure is immutable —
+        execution only consumes the counters — so resetting them is the
+        whole job; this closes the one-shot dead end where the only answer
+        to re-running a graph was rebuilding it from scratch."""
+        if self._remaining:
+            raise RuntimeError(
+                "STFGraph.reset() while tasks are still in flight")
+        for n in self._nodes:
+            n.indegree = n.indegree0
+        self._executed = False
 
     def execute(self) -> None:
         """Release roots, run the whole DAG, block until done.
 
-        One-shot: execution consumes the per-node ``indegree`` counters, so
-        a second call would see every node at zero and release the whole DAG
-        at once, silently ignoring all dependencies. Build a fresh STFGraph
-        (re-submitting the tasks) to run again.
+        Execution consumes the per-node ``indegree`` counters, so calling
+        this twice without a :meth:`reset` in between would see every node
+        at zero and release the whole DAG at once, silently ignoring all
+        dependencies — hence the guard.
         """
         if self._executed:
             raise RuntimeError(
                 "STFGraph.execute() already ran; dependency counters are "
-                "consumed and a re-run would ignore every edge. Build a "
-                "fresh STFGraph and re-submit the tasks to run again.")
+                "consumed and a re-run would ignore every edge. Call "
+                "reset() (or build a fresh STFGraph) to run again.")
         self._executed = True
         self._remaining = len(self._nodes)
         done = threading.Event()

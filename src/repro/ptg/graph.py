@@ -102,6 +102,10 @@ class LocalView:
         self._block: Dict[K, B] = {}
         self._type: Dict[K, str] = {}
         self._map: Dict[K, int] = {}  # owned AND halo tasks
+        self._ext: Dict[K, List[B]] = {}     # owned -> external-read blocks
+        self._payload: Dict[K, set] = {}     # owned -> consumers reading it
+        # relevant block -> its last writer in program order (owned or halo)
+        self.final_writes: Dict[B, K] = {}
 
     def _get(self, table: Dict[K, object], k: K, what: str):
         try:
@@ -137,6 +141,20 @@ class LocalView:
         """Shard of ``k`` — defined for owned tasks *and* the halo tasks
         appearing in this view's edge lists (out-edge routing needs it)."""
         return self._get(self._map, k, "mapping")
+
+    def external_reads(self, k: K) -> Sequence[B]:
+        """Distinct operand blocks of owned task ``k`` with no producer
+        inside this graph — the reads a one-shot execution satisfies from
+        the initial store, and a stream scheduler from a block namespace
+        (the previous submission's final writes)."""
+        return self._get(self._ext, k, "external_reads")
+
+    def payload_consumers(self, k: K):
+        """Consumers of owned task ``k`` that *read* the block it writes —
+        exactly the out-edges whose active message must carry the produced
+        value (WAR/WAW/control edges carry none). Derived during the local
+        scan, so a rank needs no global spec to route payloads."""
+        return self._payload.get(k, frozenset())
 
     def __repr__(self) -> str:
         return (f"LocalView({self.graph_name!r}, shard={self.shard}, "
@@ -551,8 +569,18 @@ class Graph:
                 if d is not None and d not in seen:
                     seen.add(d)
                     deps.append(d)
+            ext: List[B] = []
             for blk in rds:                      # RAW, in operand order
-                _add(last_writer.get(blk))
+                p = last_writer.get(blk)
+                _add(p)
+                if p is not None and p in owned_keys:
+                    # k reads p's written block: the p->k AM carries it
+                    view._payload.setdefault(p, set()).add(k)
+                elif p is None and owned and blk not in ext:
+                    # no producer in this graph: an external input (every
+                    # writer of a relevant block is scanned, so a missing
+                    # last_writer here is global, not a restriction artifact)
+                    ext.append(blk)
             for r in readers.get(blk_w, ()):     # WAR
                 _add(r)
             _add(last_writer.get(blk_w))         # WAW
@@ -581,6 +609,7 @@ class Graph:
                 view._operands[k] = rds
                 view._block[k] = blk_w
                 view._type[k] = t.name
+                view._ext[k] = ext
                 view.pos[k] = pos
                 view.tasks.append(k)
 
@@ -598,6 +627,11 @@ class Graph:
             view._out[k] = out
             derived_edges += len(out)
         view.seeds = [k for k in view.tasks if not view._in[k]]
+        # end-of-scan writer state: for every relevant block, the task whose
+        # write survives the whole program — sound because every task that
+        # touches a relevant block is scanned. The stream scheduler publishes
+        # exactly these values into the submission's block namespace.
+        view.final_writes = dict(last_writer)
         view.stats = {
             "n_owned": len(view.tasks),
             "n_halo": len(scanned) - len(view.tasks),

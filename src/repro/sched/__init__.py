@@ -1,0 +1,23 @@
+"""Persistent multi-tenant scheduler: a stream of PTGs, one live DAG.
+
+Entry point: :class:`SchedulerService` (see :mod:`repro.sched.service`).
+"""
+
+from .fair import FairPolicy
+from .namespace import NamespaceShard
+from .service import (Client, SchedulerService, Submission, SubmissionError,
+                      SubmissionFuture)
+from .state import LiveStats, SubmissionShard, TaskState
+
+__all__ = [
+    "Client",
+    "FairPolicy",
+    "LiveStats",
+    "NamespaceShard",
+    "SchedulerService",
+    "Submission",
+    "SubmissionError",
+    "SubmissionFuture",
+    "SubmissionShard",
+    "TaskState",
+]

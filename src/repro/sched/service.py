@@ -1,0 +1,741 @@
+"""The persistent, multi-tenant scheduler service.
+
+One-shot execution (``Graph.run_host``) spins up ranks, runs one graph,
+and tears the world down. The service keeps the ranks *resident*: a
+stream of PTGs from many concurrent clients is assimilated into one live
+dependency state and tasks run as predecessors complete — TaskTorrent's
+"the DAG is discovered piece by piece, as messages arrive" lifted from
+one graph to an open-ended stream of them.
+
+Architecture (all in-process, mirroring the paper's rank model):
+
+- the **frontdoor** (:class:`SchedulerService` + :class:`Client`) accepts
+  submissions, applies admission control (max in-flight tasks per client
+  — ``submit`` blocks, which is the backpressure), assigns monotone
+  submission ids, and appends SUBMIT / FAIL / WATERMARK / STOP commands
+  to a **submission bus** — an append-only log every rank consumes at its
+  own cursor. The bus's total order is the determinism anchor: all ranks
+  resolve identical cross-submission bindings because they all see the
+  same prefix in the same order;
+- each rank runs a :class:`ShardRuntime`: a resident loop that pumps the
+  communicator, assimilates new submissions **via the lazy path only**
+  (``Graph.derive_local`` — owned tasks + halo; no rank ever materializes
+  a global edge dict), and lets the work-stealing threadpool execute
+  ready tasks. The loop never drives the completion detector, so the
+  distributed-shutdown protocol (which would tear the world down at the
+  first quiescent moment) only runs inside the final ``tp.join()`` after
+  STOP;
+- per-submission wiring reuses the host-runtime shape (indegree from the
+  view's in-edges plus its external reads, cross-rank fulfillments as
+  active messages carrying the block iff the consumer reads it), but all
+  ranks share **one dispatcher-AM set registered at rank start** —
+  registration order is the global AM identity, so submissions arriving
+  later must not register new ones;
+- cross-submission data flows through named block namespaces
+  (:mod:`repro.sched.namespace`); retirement
+  (:mod:`repro.sched.state`) keeps memory on the live frontier; the ready
+  queue is ordered by the weighted-fair policy (:mod:`repro.sched.fair`).
+
+Failure is per-submission, not per-service: a task body that raises fails
+its submission's future and poisons the namespace versions it will never
+produce (readers fail loudly instead of hanging) — other clients and
+unrelated submissions are untouched.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Hashable, List, Optional
+
+import numpy as np
+
+from repro.core import runtime as core_runtime
+from repro.core.messages import WorldPoisoned
+
+from .fair import FairPolicy
+from .namespace import NamespaceShard
+from .state import LiveStats, SubmissionShard
+
+K = Hashable
+B = Hashable
+
+
+class SubmissionError(RuntimeError):
+    """A submission failed (its own body raised, or an upstream submission
+    it reads from failed before producing the block)."""
+
+
+# ---------------------------------------------------------------- frontdoor
+
+
+@dataclass
+class Submission:
+    sub_id: int
+    client: str
+    namespace: str
+    graph: object
+    blocks: dict
+    bodies: dict
+    owner_map: Optional[Callable]
+    priority: float
+    n_tasks: int
+
+    def owner(self) -> Callable[[B], int]:
+        return self.owner_map if self.owner_map is not None \
+            else self.graph.owner
+
+
+class SubmissionFuture:
+    """Handle for one submission: ``result()`` returns the blocks the
+    submission wrote (block id -> value), the same contract as the
+    one-shot ``run_host`` — which is what makes bit-identity checkable."""
+
+    def __init__(self, sub_id: int, client: str, n_tasks: int):
+        self.sub_id = sub_id
+        self.client = client
+        self.n_tasks = n_tasks
+        self._ev = threading.Event()
+        self._result = None
+        self._exc: Optional[BaseException] = None
+        self._transform: Optional[Callable] = None
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._ev.wait(timeout):
+            raise TimeoutError(
+                f"submission {self.sub_id} not done after {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return (self._transform(self._result) if self._transform
+                else self._result)
+
+    def _complete(self, blocks) -> None:
+        self._result = blocks
+        self._ev.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._ev.set()
+
+
+class _Bus:
+    """Append-only command log; ranks read at their own cursor. The total
+    order of appends IS the stream's sequential semantics."""
+
+    def __init__(self) -> None:
+        self._items: List[tuple] = []
+        self._lock = threading.Lock()
+
+    def post(self, item: tuple) -> None:
+        with self._lock:
+            self._items.append(item)
+
+    def read_from(self, cursor: int) -> List[tuple]:
+        with self._lock:
+            return self._items[cursor:]
+
+
+@dataclass
+class _SubRecord:
+    sub: Submission
+    future: SubmissionFuture
+    pending_ranks: set
+    published: dict = field(default_factory=dict)
+    t0: float = 0.0
+    resolved: bool = False
+    failed: bool = False
+
+
+class Client:
+    """Per-tenant frontdoor handle: submissions, accounting, admission.
+
+    ``max_inflight_tasks`` is the admission-control knob: ``submit``
+    blocks while the client's in-flight task count would exceed it (a
+    single oversized submission is admitted alone rather than deadlocking).
+    ``weight`` feeds the ranks' fair policy. ``stats`` accumulates tasks,
+    bytes (result blocks produced), and wall seconds per submission.
+    """
+
+    def __init__(self, service: "SchedulerService", name: str, *,
+                 weight: float = 1.0,
+                 max_inflight_tasks: Optional[int] = None,
+                 namespace: Optional[str] = None):
+        self._svc = service
+        self.name = name
+        self.weight = weight
+        self.max_inflight_tasks = max_inflight_tasks
+        self.namespace = namespace if namespace is not None else name
+        self.inflight_tasks = 0
+        self.stats = {"submitted": 0, "completed": 0, "failed": 0,
+                      "tasks": 0, "bytes": 0, "wall_seconds": 0.0}
+
+    def submit(self, graph, blocks=None, bodies=None, *,
+               owner_map: Optional[Callable] = None,
+               priority: float = 0.0,
+               namespace: Optional[str] = None,
+               timeout: Optional[float] = None) -> SubmissionFuture:
+        """Submit one PTG against a namespace; returns a future for its
+        written blocks. External reads (blocks no task of this graph
+        writes first) bind to the namespace — earlier submissions' final
+        writes win over ``blocks``' initial values. Blocks of the graph
+        must keep one owner across the namespace's submissions."""
+        n_tasks = sum(1 for _ in graph._program_iter())
+        return self._svc._admit(
+            self, graph, dict(blocks or {}), dict(bodies or {}),
+            owner_map=owner_map, priority=priority,
+            namespace=namespace if namespace is not None else self.namespace,
+            n_tasks=n_tasks, timeout=timeout)
+
+    def map(self, fn: Callable, values, *,
+            priority: float = 0.0) -> SubmissionFuture:
+        """Embarrassingly parallel convenience: one task per element of
+        ``values``, sharded round-robin; ``result()`` returns the mapped
+        list in order. Runs in a private throwaway namespace."""
+        from repro.ptg import Graph, IndexSpace
+
+        vals = list(values)
+        n = self._svc.n_shards
+        g = Graph(f"map-{self.name}", n_shards=n,
+                  owner=lambda blk: blk[1] % n)
+        g.task_type("map",
+                    writes=lambda i: ("y", i),
+                    reads=lambda i: [("x", i)],
+                    space=IndexSpace(
+                        lambda: range(len(vals)),
+                        lambda s: [i for i in range(len(vals))
+                                   if i % n == s],
+                        size=len(vals)))
+        blocks = {("x", i): np.asarray(v) for i, v in enumerate(vals)}
+        fut = self.submit(g, blocks, {"map": fn}, priority=priority,
+                          namespace=f"{self.name}/map")
+        fut._transform = lambda out: [out[("y", i)]
+                                      for i in range(len(vals))]
+        return fut
+
+
+# ------------------------------------------------------------------ service
+
+
+class SchedulerService:
+    """The resident scheduler. Typical use::
+
+        with SchedulerService(n_shards=2) as svc:
+            alice = svc.client("alice", weight=2.0)
+            fut = alice.submit(graph, blocks, bodies)
+            out = fut.result()
+
+    ``start()`` launches a driver thread running ``run_ranks(...,
+    serve_scheduler=self)``; ranks stay resident between submissions.
+    ``close()`` (or leaving the ``with``) waits for in-flight work, posts
+    STOP, and runs the distributed completion protocol to tear down.
+    """
+
+    def __init__(self, n_shards: int, *, n_threads: int = 2,
+                 timeout: float = 120.0):
+        self.n_shards = n_shards
+        self.n_threads = n_threads
+        self.timeout = timeout
+        self.bus = _Bus()
+        self.draining = threading.Event()  # run_ranks arms its deadline here
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        self._clients: Dict[str, Client] = {}
+        self._subs: Dict[int, _SubRecord] = {}
+        self._next_sub = 1
+        self._resolved_through = 0
+        self._accepting = False
+        self._closed = False
+        self._driver: Optional[threading.Thread] = None
+        self._driver_err: Optional[BaseException] = None
+        self.rank_stats: List[Optional[LiveStats]] = [None] * n_shards
+        self.rank_summaries: Optional[list] = None
+
+    # ------------------------------------------------------------ lifecycle
+
+    def start(self) -> "SchedulerService":
+        if self._driver is not None:
+            raise RuntimeError("scheduler already started")
+        self._accepting = True
+        self._driver = threading.Thread(target=self._drive, daemon=True,
+                                        name="sched-driver")
+        self._driver.start()
+        return self
+
+    def __enter__(self) -> "SchedulerService":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close(wait=exc_type is None)
+
+    def _drive(self) -> None:
+        try:
+            # attribute lookup at call time so the chaos-injection wrapper
+            # (conftest REPRO_CHAOS) sees this run_ranks call too
+            res = core_runtime.run_ranks(
+                self.n_shards, self._rank_main, n_threads=self.n_threads,
+                timeout=self.timeout, serve_scheduler=self)
+            self.rank_summaries = res[0] if isinstance(res, tuple) else res
+        except BaseException as e:
+            self._driver_err = e
+            with self._cond:
+                for rec in self._subs.values():
+                    if not rec.resolved:
+                        rec.resolved = rec.failed = True
+                        rec.future._fail(SubmissionError(
+                            f"scheduler service died: {e!r}"))
+                self._accepting = False
+                self._cond.notify_all()
+
+    def close(self, *, wait: bool = True) -> None:
+        """Stop accepting, optionally drain in-flight submissions, then
+        shut the ranks down through the completion protocol."""
+        if self._closed:
+            return
+        deadline = time.monotonic() + self.timeout
+        with self._cond:
+            self._accepting = False
+            if wait:
+                while (any(not r.resolved for r in self._subs.values())
+                       and self._driver_err is None):
+                    left = deadline - time.monotonic()
+                    if left <= 0 or not self._cond.wait(timeout=min(left, 0.5)):
+                        if time.monotonic() >= deadline:
+                            break
+        self.draining.set()
+        self.bus.post(("stop",))
+        self._closed = True
+        if self._driver is not None:
+            self._driver.join(self.timeout)
+        if self._driver_err is not None:
+            raise RuntimeError("scheduler service failed") \
+                from self._driver_err
+
+    # ------------------------------------------------------------- clients
+
+    def client(self, name: str, **kwargs) -> Client:
+        with self._lock:
+            if name in self._clients:
+                raise ValueError(f"client {name!r} already registered")
+            c = Client(self, name, **kwargs)
+            self._clients[name] = c
+            return c
+
+    def client_weight(self, name: str) -> float:
+        c = self._clients.get(name)
+        return c.weight if c is not None else 1.0
+
+    # ----------------------------------------------------------- admission
+
+    def _admit(self, client: Client, graph, blocks, bodies, *,
+               owner_map, priority, namespace, n_tasks,
+               timeout) -> SubmissionFuture:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            cap = client.max_inflight_tasks
+            while (cap is not None and client.inflight_tasks > 0
+                   and client.inflight_tasks + n_tasks > cap):
+                if self._driver_err is not None or self._closed:
+                    break
+                left = None if deadline is None \
+                    else deadline - time.monotonic()
+                if left is not None and left <= 0:
+                    raise TimeoutError(
+                        f"client {client.name!r}: admission blocked "
+                        f"({client.inflight_tasks} tasks in flight, "
+                        f"cap {cap})")
+                self._cond.wait(timeout=0.5 if left is None
+                                else min(left, 0.5))
+            if not self._accepting:
+                raise RuntimeError("scheduler service is not accepting "
+                                   "submissions (closed or not started)")
+            sub_id = self._next_sub
+            self._next_sub += 1
+            sub = Submission(sub_id, client.name, namespace, graph, blocks,
+                             bodies, owner_map, priority, n_tasks)
+            fut = SubmissionFuture(sub_id, client.name, n_tasks)
+            self._subs[sub_id] = _SubRecord(
+                sub, fut, set(range(self.n_shards)), t0=time.monotonic())
+            client.inflight_tasks += n_tasks
+            client.stats["submitted"] += 1
+            # post inside the lock: bus order == sub_id order, always
+            self.bus.post(("submit", sub))
+        return fut
+
+    # -------------------------------------------------- rank-side callbacks
+
+    def _rank_done(self, sub_id: int, rank: int, published: dict,
+                   n_bytes: int) -> None:
+        with self._cond:
+            rec = self._subs.get(sub_id)
+            if rec is None or rec.resolved:
+                return
+            rec.pending_ranks.discard(rank)
+            rec.published.update(published)
+            client = self._clients[rec.sub.client]
+            client.stats["bytes"] += n_bytes
+            if rec.pending_ranks:
+                return
+            rec.resolved = True
+            client.inflight_tasks -= rec.sub.n_tasks
+            client.stats["completed"] += 1
+            client.stats["tasks"] += rec.sub.n_tasks
+            client.stats["wall_seconds"] += time.monotonic() - rec.t0
+            rec.future._complete(rec.published)
+            self._advance_watermark()
+            self._cond.notify_all()
+
+    def _fail_submission(self, sub_id: int, exc: BaseException) -> None:
+        with self._cond:
+            rec = self._subs.get(sub_id)
+            if rec is None or rec.resolved:
+                return
+            rec.resolved = rec.failed = True
+            client = self._clients[rec.sub.client]
+            client.inflight_tasks -= rec.sub.n_tasks
+            client.stats["failed"] += 1
+            rec.future._fail(exc if isinstance(exc, SubmissionError)
+                             else SubmissionError(
+                                 f"submission {sub_id} failed: {exc!r}"))
+            # every rank must learn: skip the sub's queued tasks, poison
+            # the namespace versions it will never produce
+            self.bus.post(("fail", sub_id))
+            self._advance_watermark()
+            self._cond.notify_all()
+
+    def _advance_watermark(self) -> None:
+        # caller holds the lock
+        w = self._resolved_through
+        while (w + 1) in self._subs and self._subs[w + 1].resolved:
+            w += 1
+        if w != self._resolved_through:
+            self._resolved_through = w
+            self.bus.post(("watermark", w))
+
+    # --------------------------------------------------------------- stats
+
+    def stats(self) -> dict:
+        ranks = [s.to_dict() for s in self.rank_stats if s is not None]
+        total = sum(r["blocks_total"] for r in ranks)
+        hwm = sum(r["blocks_hwm"] for r in ranks)
+        with self._lock:
+            clients = {n: dict(c.stats) for n, c in self._clients.items()}
+        return {
+            "ranks": ranks,
+            "clients": clients,
+            "blocks_total": total,
+            "blocks_hwm": hwm,
+            "live_frac": (hwm / total) if total else 0.0,
+            "resolved_through": self._resolved_through,
+        }
+
+    # ------------------------------------------------------------ rank side
+
+    def _rank_main(self, ctx):
+        rt = ShardRuntime(ctx, self)
+        self.rank_stats[ctx.rank] = rt.stats
+        rt.serve()
+        ctx.tp.join()   # distributed completion protocol, after STOP
+        return rt.summary()
+
+
+# ------------------------------------------------------------ rank runtime
+
+
+class ShardRuntime:
+    """One resident rank: bus consumption, lazy assimilation, execution.
+
+    The serve loop pumps ``comm.progress()`` (delivery, acks, retransmits
+    — but *not* the completion detector, whose rounds would shut the
+    world down between submissions) and applies new bus commands; task
+    bodies run on the rank's worker threads as fulfillments land.
+    """
+
+    def __init__(self, ctx, svc: SchedulerService):
+        self.ctx = ctx
+        self.rank = ctx.rank
+        self.n = svc.n_shards
+        self.svc = svc
+        self.stats = LiveStats()
+        self.fair = FairPolicy()
+        self.ns = NamespaceShard(self.stats)
+        self.subs: Dict[int, SubmissionShard] = {}
+        self.open: set = set()
+        self.finished: set = set()
+        self.assimilated = 0    # highest sub_id ingested (bus order == id)
+        self.cursor = 0
+        self.tasks_run = 0
+        self._stop = False
+        # sub_id -> fulfillments that raced ahead of assimilation
+        self._held_fulfills: Dict[int, list] = {}
+        # fetches for readers this rank has not assimilated yet
+        self._held_fetches: List[tuple] = []
+        # the dispatcher-AM set: registered once, at rank start, in the
+        # same order on every rank (registration order is the AM identity)
+        self.am_fulfill = ctx.comm.make_active_msg(self._on_fulfill)
+        self.am_fetch = ctx.comm.make_active_msg(self._on_fetch)
+        self.am_value = ctx.comm.make_active_msg(self._on_value)
+        self.am_publish = ctx.comm.make_active_msg(self._on_publish)
+
+    # ------------------------------------------------------------ the loop
+
+    def serve(self) -> None:
+        while True:
+            if self.ctx.comm.world.poison.is_set():
+                raise WorldPoisoned("world poisoned while serving")
+            for cmd in self.svc.bus.read_from(self.cursor):
+                self.cursor += 1
+                self._apply(cmd)
+            self.ctx.comm.progress()
+            if self._stop and not self.open:
+                return
+            time.sleep(10e-6)
+
+    def _apply(self, cmd: tuple) -> None:
+        kind = cmd[0]
+        if kind == "submit":
+            self._assimilate(cmd[1])
+        elif kind == "fail":
+            self._fail_cmd(cmd[1])
+        elif kind == "watermark":
+            self.ns.retire_through(cmd[1])
+        elif kind == "stop":
+            self._stop = True
+
+    def summary(self) -> dict:
+        return {"rank": self.rank, "tasks_run": self.tasks_run,
+                "assimilated": self.assimilated,
+                "ns_live_versions": self.ns.live_versions(),
+                **self.stats.to_dict()}
+
+    # -------------------------------------------------------- assimilation
+
+    def _assimilate(self, sub: Submission) -> None:
+        owner = sub.owner()
+        # the one and only discovery step: owned + halo, never global
+        view = sub.graph.derive_local(self.rank, sub.owner_map)
+        tf = self.ctx.taskflow(f"sub{sub.sub_id}")
+        shard = SubmissionShard(sub, view, tf, self.stats)
+        self.subs[sub.sub_id] = shard
+        self.open.add(sub.sub_id)
+
+        # 1. seed initial values for owned blocks (virgin timelines only:
+        #    an earlier submission's write is the truth)
+        for blk, val in sub.blocks.items():
+            if owner(blk) % self.n == self.rank:
+                self.ns.seed_initial(sub.namespace, blk, sub.sub_id,
+                                     np.asarray(val))
+        # 2. reserve the versions this submission will write here
+        for blk in view.final_writes:
+            if owner(blk) % self.n == self.rank:
+                self.ns.ensure_pending(sub.namespace, blk, sub.sub_id)
+
+        # 3. wire the per-submission Taskflow
+        weight = self.svc.client_weight(sub.client)
+
+        def indegree(k):
+            return (len(view.in_deps(k)) + len(view.external_reads(k))) or 1
+
+        def priority(k):
+            shard.mark_ready(k)   # spawn time == entering the ready queue
+            return self.fair.priority_for(sub.client, weight, sub.priority)
+
+        tf.set_indegree(indegree)
+        tf.set_mapping(lambda k: hash(k) % self.ctx.tp.n_threads)
+        tf.set_priority(priority)
+        tf.set_task(lambda k: self._run_task(shard, k))
+
+        # 4. bind external reads + release seeds (a bad binding fails the
+        #    submission, but assimilation always finalizes: the cursor and
+        #    held-fetch draining must advance regardless)
+        if self._bind_external(shard, owner):
+            # seeds: tasks with no dependencies at all (synthetic indegree
+            # 1, fulfilled here — execution may start immediately)
+            for k in view.tasks:
+                if not view.in_deps(k) and not view.external_reads(k):
+                    tf.fulfill_promise(k)
+            # fulfillments that arrived before this submission existed here
+            for (d, blk, payload) in self._held_fulfills.pop(
+                    sub.sub_id, []):
+                self._apply_fulfill(shard, d, blk, payload)
+        else:
+            self._held_fulfills.pop(sub.sub_id, None)
+        self.assimilated = sub.sub_id
+        self._drain_held_fetches()
+        if not shard.failed and shard.remaining == 0:
+            self._local_complete(shard)
+
+    def _bind_external(self, shard: SubmissionShard, owner) -> bool:
+        """Bind the view's external reads: owned blocks straight from this
+        rank's namespace shard, remote ones via one FETCH per block."""
+        sub, view = shard.sub, shard.view
+        remote: Dict[B, List[K]] = {}
+        for k in view.tasks:
+            for blk in view.external_reads(k):
+                ob = owner(blk) % self.n
+                if ob == self.rank:
+                    try:
+                        self.ns.bind(sub.namespace, blk, sub.sub_id,
+                                     self._bind_cb(shard, blk, [k]))
+                    except KeyError as e:
+                        self._fail_local(shard, SubmissionError(str(e)))
+                        return False
+                else:
+                    remote.setdefault(blk, []).append(k)
+        with shard.lock:
+            shard.fetch_waiters.update(remote)
+        for blk in remote:
+            self.am_fetch.send(owner(blk) % self.n, sub.namespace, blk,
+                               sub.sub_id, self.rank)
+        return True
+
+    def _bind_cb(self, shard: SubmissionShard, blk: B, ks: List[K]):
+        def cb(value, poisoned):
+            if poisoned:
+                self._fail_local(shard, SubmissionError(
+                    f"submission {shard.sub.sub_id}: upstream submission "
+                    f"failed before producing block {blk!r}"))
+                return
+            shard.put(blk, value)
+            for k in ks:
+                shard.tf.fulfill_promise(k)
+        return cb
+
+    # ----------------------------------------------------------- execution
+
+    def _run_task(self, shard: SubmissionShard, k: K) -> None:
+        if shard.failed:
+            return   # sub already failed: don't run, don't propagate
+        view = shard.view
+        try:
+            shard.mark_running(k)
+            with shard.lock:
+                ops = [shard.store[b] for b in view.operands(k)]
+            out = np.asarray(shard.sub.bodies[view.type_of(k)](*ops))
+        except BaseException as e:
+            self._fail_local(shard, e)
+            return
+        blk = view.block_of(k)
+        shard.put(blk, out)
+        payload_to = view.payload_consumers(k)
+        n_remote = 0
+        for d in view.out_deps(k):
+            ds = view.mapping(d) % self.n
+            if ds == self.rank:
+                shard.tf.fulfill_promise(d)
+            else:
+                n_remote += 1
+                self.am_fulfill.send(ds, shard.sub.sub_id, d, blk,
+                                     out if d in payload_to else None)
+        if view.final_writes.get(blk) == k:
+            self._publish(shard, blk, out)
+        self.tasks_run += 1
+        if shard.complete(k, n_remote):
+            self._local_complete(shard)
+
+    def _publish(self, shard: SubmissionShard, blk: B, out) -> None:
+        sub = shard.sub
+        with shard.lock:
+            shard.published[blk] = out
+        ob = sub.owner()(blk) % self.n
+        if ob == self.rank:
+            self.ns.publish(sub.namespace, blk, sub.sub_id, out)
+        else:
+            self.am_publish.send(ob, sub.namespace, blk, sub.sub_id, out)
+
+    def _local_complete(self, shard: SubmissionShard) -> None:
+        sub_id = shard.sub.sub_id
+        if sub_id in self.finished:
+            return
+        self.open.discard(sub_id)
+        self.finished.add(sub_id)
+        with shard.lock:
+            published = dict(shard.published)
+        n_bytes = sum(getattr(v, "nbytes", 0) for v in published.values())
+        self.svc._rank_done(sub_id, self.rank, published, n_bytes)
+        shard.drop()
+        self.subs.pop(sub_id, None)   # forget the submission: O(frontier)
+
+    # ------------------------------------------------------------- failure
+
+    def _fail_local(self, shard: SubmissionShard, exc: BaseException) -> None:
+        sub_id = shard.sub.sub_id
+        with shard.lock:
+            if shard.failed:
+                return
+            shard.failed = True
+        self.open.discard(sub_id)
+        self.finished.add(sub_id)
+        self.svc._fail_submission(sub_id, exc)
+        self.ns.poison_sub(sub_id)
+        shard.drop()
+        self.subs.pop(sub_id, None)
+
+    def _fail_cmd(self, sub_id: int) -> None:
+        shard = self.subs.get(sub_id)
+        if shard is not None:
+            with shard.lock:
+                shard.failed = True
+            self.open.discard(sub_id)
+            self.finished.add(sub_id)
+            shard.drop()
+            self.subs.pop(sub_id, None)
+        self.ns.poison_sub(sub_id)
+
+    # ------------------------------------------------------- active messages
+
+    def _on_fulfill(self, sub_id: int, d: K, blk: B, payload) -> None:
+        shard = self.subs.get(sub_id)
+        if shard is None:
+            if sub_id > self.assimilated:
+                self._held_fulfills.setdefault(sub_id, []).append(
+                    (d, blk, payload))
+            return   # finished or failed: late traffic is inert
+        self._apply_fulfill(shard, d, blk, payload)
+
+    def _apply_fulfill(self, shard: SubmissionShard, d: K, blk: B,
+                       payload) -> None:
+        if payload is not None:
+            shard.put(blk, np.asarray(payload))
+        shard.tf.fulfill_promise(d)
+
+    def _on_fetch(self, ns: str, blk: B, reader_sub: int,
+                  src: int) -> None:
+        if reader_sub > self.assimilated:
+            # binding needs every version with key < (reader_sub, 1) in
+            # the timeline — hold until this rank's cursor catches up
+            self._held_fetches.append((ns, blk, reader_sub, src))
+            return
+
+        def cb(value, poisoned):
+            self.am_value.send(src, reader_sub, blk, value, poisoned)
+        try:
+            self.ns.bind(ns, blk, reader_sub, cb)
+        except KeyError:
+            self.am_value.send(src, reader_sub, blk, None, True)
+
+    def _drain_held_fetches(self) -> None:
+        held, self._held_fetches = self._held_fetches, []
+        for args in held:
+            self._on_fetch(*args)
+
+    def _on_value(self, reader_sub: int, blk: B, value, poisoned) -> None:
+        shard = self.subs.get(reader_sub)
+        if shard is None:
+            return
+        if poisoned:
+            self._fail_local(shard, SubmissionError(
+                f"submission {reader_sub}: upstream submission failed "
+                f"before producing block {blk!r}"))
+            return
+        shard.put(blk, np.asarray(value))
+        with shard.lock:
+            ks = shard.fetch_waiters.pop(blk, [])
+        for k in ks:
+            shard.tf.fulfill_promise(k)
+
+    def _on_publish(self, ns: str, blk: B, sub_id: int, value) -> None:
+        self.ns.publish(ns, blk, sub_id, np.asarray(value))

@@ -106,6 +106,25 @@ class ElasticController:
         self.stragglers = StragglerDetector()
         self.failed: List[int] = []
         self.plans: List[ElasticPlan] = []
+        self._pending_admits: List[int] = []
+
+    def admit(self, host: int) -> None:
+        """Grow path: announce a new host (or re-admit a failed one). The
+        lease arming rule applies unchanged — the admitted host joins the
+        mesh only once it has proven alive, i.e. :meth:`poll` emits the
+        grow plan at the host's first heartbeat, not at admission. Until
+        then it is neither a survivor nor declarable dead (never-seen
+        hosts are ignored by the failure detector)."""
+        if host >= self.n_hosts:
+            self.n_hosts = host + 1
+            self.monitor.n_hosts = host + 1
+        if host in set(self.failed):
+            self.failed.remove(host)
+        # a re-admitted host must re-arm its lease from scratch: a stale
+        # heartbeat from before its death must not resurrect it
+        self.monitor.last_seen.pop(host, None)
+        if host not in self._pending_admits:
+            self._pending_admits.append(host)
 
     def beat(self, host: int, step_time: Optional[float] = None,
              now: Optional[float] = None) -> None:
@@ -120,11 +139,18 @@ class ElasticController:
              now: Optional[float] = None) -> Optional[ElasticPlan]:
         newly = [h for h in self.monitor.dead_hosts(now)
                  if h in self.monitor.last_seen and h not in set(self.failed)]
-        if not newly:
+        grown = [h for h in self._pending_admits
+                 if h in self.monitor.last_seen]
+        if not newly and not grown:
             return None
         self.failed.extend(newly)
-        plan = plan_remesh(self.n_hosts, self.failed, self.chips_per_host,
-                           self.model_axis, latest_ckpt)
+        for h in grown:
+            self._pending_admits.remove(h)
+        # admitted hosts still waiting on their first heartbeat are not
+        # survivors yet — the plan meshes only proven-alive capacity
+        plan = plan_remesh(self.n_hosts,
+                           list(self.failed) + self._pending_admits,
+                           self.chips_per_host, self.model_axis, latest_ckpt)
         self.plans.append(plan)
         return plan
 

@@ -317,3 +317,32 @@ def test_stf_execute_is_one_shot():
     with pytest.raises(RuntimeError, match="already ran"):
         g.execute()
     assert ran == ["a", "b"]  # nothing re-ran
+
+
+def test_stf_reset_reexecutes_with_dependencies():
+    """reset() restores the submitted indegree counters, so a re-run
+    observes every edge again — the orderings hold on both passes."""
+    tp = Threadpool(2)
+    g = STFGraph(tp)
+    log = []
+    lock = threading.Lock()
+
+    def mk(name):
+        def fn():
+            with lock:
+                log.append(name)
+        return fn
+
+    g.submit(mk("w"), [("x", "W")])
+    g.submit(mk("r"), [("x", "R")])
+    g.submit(mk("w2"), [("x", "W")])   # WAR on r, WAW on w
+    for _ in range(3):                 # execute() blocks until done
+        g.execute()
+        assert log == ["w", "r", "w2"], log
+        log.clear()
+        # the one-shot guard arms after every run, and reset() disarms it
+        with pytest.raises(RuntimeError, match="already ran"):
+            g.execute()
+        assert log == []               # the guard really ran nothing
+        g.reset()
+    tp.join()

@@ -261,6 +261,43 @@ def test_derive_local_owner_map_override():
             assert vo.mapping(k) == vr.mapping(k)
 
 
+def test_grow_rederives_only_moved_shards():
+    """Elastic grow: when new capacity joins and blocks rebalance, only
+    the shards whose owned set actually changed need re-derivation. A
+    shard untouched by the new owner map produces an edge-for-edge
+    identical view (halo mapping included) under the old and the new map
+    — the O(moved shards) re-mesh cost the lazy derivation buys, vs the
+    eager path's rebuild-the-world on any ownership change."""
+    width, depth, n_shards = 8, 6, 4
+    g, _ = taskbench_graph("stencil", width, depth, n_shards, 4)
+
+    def full(blk):                       # post-grow: the declared spread
+        return blk[1] * n_shards // width
+
+    def clamped(blk):                    # pre-grow: shard 3 not joined yet
+        return min(full(blk), 2)
+
+    def snap(v):
+        return {k: (v.in_deps(k), v.out_deps(k), v.operands(k),
+                    v.block_of(k), v.type_of(k), v.mapping(k))
+                for k in v.tasks}
+
+    before = [g.derive_local(s, owner_map=clamped) for s in range(n_shards)]
+    after = [g.derive_local(s, owner_map=full) for s in range(n_shards)]
+
+    # shard 3 joins and takes over exactly the tasks shard 2 gives up
+    assert before[3].tasks == [] and after[3].tasks != []
+    moved = set(before[2].tasks) - set(after[2].tasks)
+    assert moved == set(after[3].tasks)
+
+    # unmoved shards: identical views — nothing to re-derive on grow
+    for s in (0, 1):
+        assert before[s].tasks == after[s].tasks
+        assert before[s].seeds == after[s].seeds
+        assert snap(before[s]) == snap(after[s])
+        assert before[s]._map == after[s]._map   # halo owners unchanged too
+
+
 def test_discover_local_handles_empty_shards():
     """A shard owning nothing (fully ragged) yields an empty view; the
     local-mode schedule still matches global discovery."""

@@ -1,0 +1,332 @@
+"""The persistent scheduler service: streams of PTGs from concurrent
+clients must be *exactly* the one-shot executions, interleaved.
+
+The contract under test, end to end:
+
+- bit-identity: every submission's ``result()`` equals the one-shot
+  ``Graph.run_host`` of the same graph on the same inputs — for a single
+  submission, for a chained stream through one namespace (each submission
+  reading the previous one's final writes), and for the acceptance
+  scenario (4 clients x 8 mixed Task-Bench + Cholesky submissions,
+  concurrent);
+- isolation: clients in different namespaces never observe each other,
+  under arbitrary interleavings (hypothesis over patterns/shapes/seeds);
+- retirement: live state tracks the frontier, not history — the block
+  high-water mark stays flat as the stream length grows, and nothing is
+  live once the stream drains;
+- admission: a client past its in-flight cap *blocks in submit* until
+  earlier work completes (backpressure, not rejection);
+- failure: a raising task body fails exactly its own submission, poisons
+  the blocks it never produced (dependent readers fail loudly), and
+  leaves every other client untouched;
+- fairness: the weighted-fair policy is deterministic and orders ready
+  tasks by weighted virtual time.
+
+These tests run unmodified under ``REPRO_CHAOS=loss|dup`` (the sched-soak
+CI leg): reliable delivery keeps a resident, lossy world correct.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.ptg import Graph, IndexSpace
+from repro.sched import FairPolicy, SchedulerService, SubmissionError
+from repro.linalg.cholesky import (cholesky_bodies, cholesky_graph,
+                                   make_spd_blocks)
+from benchmarks.taskbench_scaling import (taskbench_blocks, taskbench_bodies,
+                                          taskbench_graph)
+
+W, D, S = 4, 3, 2   # small stencil grid: 12 tasks, 12 blocks, 2 shards
+
+
+def chained_refs(pattern, blocks, m, *, seed=0):
+    """Sequential one-shot executions, each seeded with everything the
+    previous runs wrote — the oracle for a chained submission stream."""
+    bodies = taskbench_bodies()
+    refs, store = [], dict(blocks)
+    for _ in range(m):
+        g, _ = taskbench_graph(pattern, W, D, S, seed=seed)
+        out = g.run_host(store, bodies, n_threads=2)
+        refs.append(out)
+        store.update(out)
+    return refs
+
+
+def assert_blocks_equal(out, ref):
+    assert set(out) == set(ref)
+    for blk in ref:
+        assert np.array_equal(np.asarray(out[blk]), np.asarray(ref[blk])), blk
+
+
+# ------------------------------------------------------------ bit-identity
+
+def test_single_submission_matches_one_shot():
+    blocks = taskbench_blocks(W, D, seed=1)
+    (ref,) = chained_refs("stencil", blocks, 1)
+    with SchedulerService(S, timeout=60.0) as svc:
+        c = svc.client("alice")
+        g, _ = taskbench_graph("stencil", W, D, S)
+        out = c.submit(g, blocks, taskbench_bodies()).result(60.0)
+    assert_blocks_equal(out, ref)
+    assert c.stats["completed"] == 1 and c.stats["tasks"] == W * D
+
+
+def test_chained_stream_matches_sequential_one_shots():
+    """Submissions 2..m pass no blocks at all: their external reads bind
+    to the namespace, i.e. to the previous submission's final writes."""
+    m = 4
+    blocks = taskbench_blocks(W, D, seed=2)
+    refs = chained_refs("stencil", blocks, m)
+    with SchedulerService(S, timeout=60.0) as svc:
+        c = svc.client("alice")
+        futs = []
+        for j in range(m):
+            g, _ = taskbench_graph("stencil", W, D, S)
+            futs.append(c.submit(g, blocks if j == 0 else {},
+                                 taskbench_bodies()))
+        outs = [f.result(60.0) for f in futs]
+    for out, ref in zip(outs, refs):
+        assert_blocks_equal(out, ref)
+
+
+def test_map_returns_ordered_results():
+    with SchedulerService(S, timeout=60.0) as svc:
+        c = svc.client("mapper")
+        r = c.map(lambda x: x * 2 + 1, np.arange(9, dtype=np.int64))
+        assert [int(v) for v in r.result(60.0)] == \
+            [2 * i + 1 for i in range(9)]
+
+
+# ----------------------------------------------------- isolation (property)
+
+@settings(deadline=None, max_examples=4,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    pattern=st.sampled_from(["stencil", "fft", "tree", "random"]),
+    n_clients=st.integers(2, 3),
+    m=st.integers(1, 3),
+    seed=st.integers(0, 1000),
+)
+def test_interleaved_client_streams_are_isolated(pattern, n_clients, m, seed):
+    """K clients x M chained submissions, round-robin interleaved into the
+    service: each client's stream must equal its own isolated sequential
+    one-shot executions — namespaces never leak across tenants."""
+    bodies = taskbench_bodies()
+    blocks = [taskbench_blocks(W, D, seed=seed + i) for i in range(n_clients)]
+    with SchedulerService(S, timeout=90.0) as svc:
+        clients = [svc.client(f"c{i}", weight=float(i + 1))
+                   for i in range(n_clients)]
+        futs = [[] for _ in range(n_clients)]
+        for j in range(m):
+            for i, c in enumerate(clients):
+                g, _ = taskbench_graph(pattern, W, D, S, seed=seed)
+                futs[i].append(c.submit(g, blocks[i] if j == 0 else {},
+                                        bodies))
+        outs = [[f.result(90.0) for f in fs] for fs in futs]
+    for i in range(n_clients):
+        refs = chained_refs(pattern, blocks[i], m, seed=seed)
+        for out, ref in zip(outs[i], refs):
+            assert_blocks_equal(out, ref)
+
+
+# ---------------------------------------------------------------- retirement
+
+def _stream_hwm(m):
+    blocks = taskbench_blocks(W, D, seed=3)
+    with SchedulerService(S, timeout=90.0) as svc:
+        c = svc.client("alice")
+        for j in range(m):
+            g, _ = taskbench_graph("stencil", W, D, S)
+            c.submit(g, blocks if j == 0 else {},
+                     taskbench_bodies()).result(90.0)
+    return svc.stats()
+
+
+def test_retirement_keeps_live_blocks_flat_across_stream_length():
+    """The whole point of reference-counted retirement: a 3x longer
+    stream materializes ~3x the blocks in total, but the high-water mark
+    of *live* blocks barely moves — memory tracks the frontier."""
+    s3, s9 = _stream_hwm(3), _stream_hwm(9)
+    assert s9["blocks_total"] >= 2 * s3["blocks_total"]
+    # slack of one submission's blocks: the watermark that retires sub j
+    # races the assimilation of sub j+1
+    assert s9["blocks_hwm"] <= s3["blocks_hwm"] + W * D
+    assert s9["live_frac"] < s3["live_frac"]   # total grows, frontier doesn't
+    assert all(r["tasks_live"] == 0 for r in s9["ranks"])
+
+
+# ----------------------------------------------------------------- admission
+
+def _single_type_graph(name, n_tasks, n_shards=1):
+    g = Graph(name, n_shards=n_shards, owner=lambda blk: blk[1] % n_shards)
+    g.task_type("t",
+                writes=lambda i: ("g", i),
+                reads=lambda i: [("g", i)],
+                space=IndexSpace(lambda: range(n_tasks),
+                                 lambda s: [i for i in range(n_tasks)
+                                            if i % n_shards == s],
+                                 size=n_tasks))
+    return g
+
+
+def test_admission_backpressure_blocks_submit_until_capacity():
+    gate = threading.Event()
+    bodies = {"t": lambda x: (gate.wait(60.0), x + 1.0)[1]}
+    blocks = {("g", i): np.float64(i) for i in range(2)}
+    state = {"admitted": False, "fut": None}
+    with SchedulerService(1, timeout=90.0) as svc:
+        c = svc.client("capped", max_inflight_tasks=2)
+        f1 = c.submit(_single_type_graph("a", 2), blocks, bodies)
+
+        def second():
+            state["fut"] = c.submit(_single_type_graph("b", 2), blocks,
+                                    bodies)
+            state["admitted"] = True
+
+        t = threading.Thread(target=second, daemon=True)
+        t.start()
+        time.sleep(0.4)
+        # 2 tasks in flight, 2 more would exceed the cap: submit() blocks
+        assert not state["admitted"]
+        gate.set()
+        t.join(60.0)
+        assert state["admitted"]
+        out1 = f1.result(60.0)
+        out2 = state["fut"].result(60.0)
+    assert out1[("g", 1)] == 2.0
+    assert out2[("g", 1)] == 3.0   # chained through the namespace
+
+
+def test_admission_timeout_raises():
+    gate = threading.Event()
+    bodies = {"t": lambda x: (gate.wait(60.0), x + 1.0)[1]}
+    blocks = {("g", 0): np.float64(0)}
+    with SchedulerService(1, timeout=90.0) as svc:
+        c = svc.client("capped", max_inflight_tasks=1)
+        f1 = c.submit(_single_type_graph("a", 1), blocks, bodies)
+        with pytest.raises(TimeoutError, match="admission blocked"):
+            c.submit(_single_type_graph("b", 1), blocks, bodies, timeout=0.2)
+        gate.set()
+        f1.result(60.0)
+
+
+# ------------------------------------------------------------------- failure
+
+def test_failed_submission_is_isolated_and_poisons_dependents():
+    def boom(x):
+        raise ValueError("boom")
+
+    blocks_a = {("g", i): np.float64(i) for i in range(2)}
+    blocks_b = taskbench_blocks(W, D, seed=4)
+    (ref_b,) = chained_refs("stencil", blocks_b, 1)
+    with SchedulerService(S, timeout=90.0) as svc:
+        a, b = svc.client("a"), svc.client("b")
+        fa = a.submit(_single_type_graph("bad", 2, S), blocks_a, {"t": boom})
+        g, _ = taskbench_graph("stencil", W, D, S)
+        fb = b.submit(g, blocks_b, taskbench_bodies())
+        with pytest.raises(SubmissionError):
+            fa.result(60.0)
+        # a's failure poisoned the blocks it never produced: a dependent
+        # submission in a's namespace fails loudly instead of hanging
+        fdep = a.submit(_single_type_graph("dep", 2, S), {},
+                        {"t": lambda x: x + 1.0})
+        with pytest.raises(SubmissionError, match="upstream"):
+            fdep.result(60.0)
+        # ...while the other tenant is untouched
+        assert_blocks_equal(fb.result(60.0), ref_b)
+    assert a.stats["failed"] == 2 and a.stats["completed"] == 0
+    assert b.stats["failed"] == 0 and b.stats["completed"] == 1
+
+
+# ------------------------------------------------------------------ fairness
+
+def test_fair_policy_is_deterministic_weighted_round_robin():
+    def run(seq):
+        p = FairPolicy()
+        return [p.priority_for(c, w) for c, w in seq]
+
+    seq = [("a", 2.0), ("b", 1.0)] * 6
+    first = run(seq)
+    assert first == run(seq)                      # fully deterministic
+    pa, pb = first[0::2], first[1::2]
+    # priorities decay along each lane (later spawns run later)...
+    assert pa == sorted(pa, reverse=True)
+    assert pb == sorted(pb, reverse=True)
+    # ...and the weight-2 lane's virtual time advances half as fast, so
+    # after equal spawn counts its tasks still outrank the weight-1 lane's
+    assert all(x >= y for x, y in zip(pa, pb))
+    assert pa[-1] > pb[-1]
+    # explicit priority is a bias on top of the fair start
+    p = FairPolicy()
+    assert p.priority_for("c", 1.0, 5.0) == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------- acceptance
+
+def test_acceptance_four_clients_eight_mixed_submissions():
+    """ISSUE acceptance: >=4 concurrent clients x >=8 submissions each
+    (all four Task-Bench patterns + the Cholesky linalg family), every
+    result bit-identical to an independent one-shot execution, and
+    nothing left live once the stream drains."""
+    patterns = ("stencil", "fft", "tree", "random")
+    tb_blocks = taskbench_blocks(W, D, seed=7)
+    tb_bodies = taskbench_bodies()
+    ch_blocks, _ = make_spd_blocks(4, 4, seed=7)
+    ch_bodies = cholesky_bodies()
+
+    def written_ref(make_graph, blocks, bodies):
+        # run_host gathers every owned block, read-only inputs included
+        # (cholesky's ("A", i, 0) column is never written); the future's
+        # contract is the submission's *writes*, so restrict the oracle
+        out = make_graph().run_host(blocks, bodies, n_threads=2)
+        eager = make_graph().build()
+        written = {eager.block_of(k) for k in eager.tasks}
+        return {blk: v for blk, v in out.items() if blk in written}
+
+    refs = {}
+    for p in patterns:
+        refs[p] = written_ref(
+            lambda p=p: taskbench_graph(p, W, D, S, seed=7)[0],
+            tb_blocks, tb_bodies)
+    refs["cholesky"] = written_ref(lambda: cholesky_graph(4, 2, 1, 4),
+                                   ch_blocks, ch_bodies)
+
+    results = {}
+    with SchedulerService(S, timeout=120.0) as svc:
+        def run_client(name, weight):
+            c = svc.client(name, weight=weight)
+            futs = []
+            for j in range(8):
+                ns = f"{name}/{j}"   # fresh namespace: independent subs
+                if j == 7:
+                    futs.append(("cholesky", c.submit(
+                        cholesky_graph(4, 2, 1, 4), ch_blocks, ch_bodies,
+                        namespace=ns)))
+                else:
+                    p = patterns[j % 4]
+                    g, _ = taskbench_graph(p, W, D, S, seed=7)
+                    futs.append((p, c.submit(g, tb_blocks, tb_bodies,
+                                             namespace=ns)))
+            results[name] = [(kind, f.result(120.0)) for kind, f in futs]
+
+        threads = [threading.Thread(target=run_client,
+                                    args=(f"t{i}", float(i + 1)), daemon=True)
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(120.0)
+
+    assert sorted(results) == [f"t{i}" for i in range(4)]
+    for name, rows in results.items():
+        assert len(rows) == 8
+        for kind, out in rows:
+            assert_blocks_equal(out, refs[kind])
+    stats = svc.stats()
+    assert all(r["tasks_live"] == 0 for r in stats["ranks"])
+    assert all(stats["clients"][f"t{i}"]["completed"] == 8 for i in range(4))
+    assert stats["live_frac"] < 1.0   # retirement did retire

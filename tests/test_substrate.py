@@ -135,6 +135,48 @@ def test_elastic_controller_declares_death_once():
     assert c.alive() == [0, 1, 2]
 
 
+def test_elastic_controller_grows_mesh_on_admit():
+    """Grow path: an admitted host produces a grow plan exactly when it
+    proves alive (first heartbeat), and a re-admitted previously-failed
+    host must re-arm its lease — no stale-heartbeat resurrection."""
+    from repro.train.elastic import ElasticController
+
+    c = ElasticController(n_hosts=3, chips_per_host=2, model_axis=2,
+                          dead_after=2.0)
+    for h in range(3):
+        c.beat(h, 0.1, now=0.0)
+    assert c.poll(latest_ckpt=None, now=1.0) is None
+
+    # admit a brand-new host: no plan until it heartbeats...
+    c.admit(3)
+    assert c.n_hosts == 4
+    assert c.poll(latest_ckpt=5, now=1.5) is None
+    # ...and its silence is not a death either (lease unarmed), no matter
+    # how long it stays quiet while the rest of the fleet keeps beating
+    for h in range(3):
+        c.beat(h, 0.1, now=50.0)
+    assert c.poll(latest_ckpt=5, now=50.0) is None
+    c.beat(3, 0.1, now=50.5)
+    plan = c.poll(latest_ckpt=5, now=50.5)
+    assert plan is not None and plan.survivors == [0, 1, 2, 3]
+    assert plan.mesh_shape == (4, 2)       # data axis grew 3 -> 4
+    assert plan.restore_step == 5
+
+    # now host 3 dies, then is re-admitted: shrink plan, then grow again
+    for step in range(51, 55):
+        for h in range(3):
+            c.beat(h, 0.1, now=float(step))
+    plan = c.poll(latest_ckpt=7, now=54.0)
+    assert plan is not None and plan.survivors == [0, 1, 2]
+    c.admit(3)
+    assert c.failed == []
+    # stale pre-death heartbeat must not count as proof of life
+    assert c.poll(latest_ckpt=7, now=54.1) is None
+    c.beat(3, 0.1, now=54.5)
+    plan = c.poll(latest_ckpt=7, now=54.5)
+    assert plan is not None and plan.survivors == [0, 1, 2, 3]
+
+
 def test_elastic_controller_ignores_never_seen_hosts():
     """A host that never heartbeat is a slow cold start, not a failure
     (same arming rule as the runtime's lease detector)."""
