@@ -20,7 +20,11 @@ pure function of the task id".
 Lifecycle mirrors the task state machine: a version is PENDING from
 assimilation (the owner rank learns a final write is coming) until the
 writer publishes (AVAILABLE) or its submission fails (POISONED — readers
-that bound to it fail too, instead of deadlocking). Retirement is driven
+that bound to it fail too, instead of deadlocking). Both resolutions are
+final: a straggler publish from a failed submission's surviving task
+never flips POISONED back, and one whose version retirement already
+dropped is discarded — what readers observe is a pure function of bus
+order, never of message timing. Retirement is driven
 by the frontdoor's watermark (the resolved-submission prefix): a version
 superseded by a later one at or below the watermark can never be a
 binding target again and is dropped — namespace memory holds the latest
@@ -63,6 +67,10 @@ class NamespaceShard:
         self._lock = threading.Lock()
         self._vers: Dict[Tuple[str, B], List[_Version]] = {}
         self._stats = stats
+        # resolved-prefix watermark seen by retire_through: versions of
+        # submissions <= this may already have been dropped as superseded,
+        # so straggler publishes for them must not re-insert stale state
+        self._retired = 0
 
     # -------------------------------------------------------------- writes
 
@@ -93,19 +101,34 @@ class NamespaceShard:
         May arrive before the owner assimilated ``sub_id`` — the writer's
         rank runs ahead — in which case the publish creates the version;
         no reader of a later submission can have bound yet, because the
-        owner binds readers only after assimilating them, in bus order."""
+        owner binds readers only after assimilating them, in bus order.
+
+        Two straggler cases are ignored so resolution stays final and
+        timing-independent: a POISONED version stays poisoned (a task of a
+        failed submission finishing on another rank after the fail command
+        must not resurrect the value), and a publish whose version
+        ``retire_through`` already dropped as superseded must not
+        re-insert it (it could never be a binding target again)."""
         with self._lock:
             timeline = self._vers.setdefault((ns, blk), [])
             for v in timeline:
                 if v.key == (sub_id, 1):
                     break
             else:
+                if sub_id <= self._retired:
+                    if not timeline:
+                        del self._vers[(ns, blk)]
+                    return
                 v = _Version((sub_id, 1), PENDING)
                 self._insert(timeline, v)
+            if v.state == POISONED:
+                return
+            first = v.state != AVAILABLE
             v.state = AVAILABLE
             v.value = value
             waiters, v.waiters = v.waiters, []
-        self._stats.block_up()
+        if first:
+            self._stats.block_up()
         for cb in waiters:
             cb(value, False)
 
@@ -169,6 +192,7 @@ class NamespaceShard:
         on PENDING versions of unresolved submissions, which survive."""
         freed = 0
         with self._lock:
+            self._retired = max(self._retired, watermark)
             for key, timeline in list(self._vers.items()):
                 cut = 0
                 for i, v in enumerate(timeline):
@@ -180,6 +204,28 @@ class NamespaceShard:
                     del timeline[:cut]
         if freed:
             self._stats.block_down(freed)
+
+    def drop_namespace(self, ns: str) -> None:
+        """Drop every timeline of an *ephemeral* namespace (one no later
+        submission will ever target — ``Client.map``'s throwaway
+        namespaces). The frontdoor posts the drop after the watermark has
+        passed the namespace's one submission, so any straggler publish
+        that follows is caught by the ``_retired`` guard instead of
+        resurrecting state. Surviving waiters (there should be none on a
+        resolved submission) fail loudly rather than hang."""
+        freed = 0
+        fire: List[Callable] = []
+        with self._lock:
+            for key in [k for k in self._vers if k[0] == ns]:
+                for v in self._vers.pop(key):
+                    if v.state == AVAILABLE:
+                        freed += 1
+                    fire.extend(v.waiters)
+                    v.waiters = []
+        if freed:
+            self._stats.block_down(freed)
+        for cb in fire:
+            cb(None, True)
 
     def live_versions(self) -> int:
         with self._lock:

@@ -44,6 +44,7 @@ unrelated submissions are untouched.
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
@@ -81,6 +82,9 @@ class Submission:
     owner_map: Optional[Callable]
     priority: float
     n_tasks: int
+    # ephemeral: no later submission will ever target this namespace, so
+    # its state is dropped wholesale once the watermark passes (Client.map)
+    ephemeral: bool = False
 
     def owner(self) -> Callable[[B], int]:
         return self.owner_map if self.owner_map is not None \
@@ -124,19 +128,30 @@ class SubmissionFuture:
 
 class _Bus:
     """Append-only command log; ranks read at their own cursor. The total
-    order of appends IS the stream's sequential semantics."""
+    order of appends IS the stream's sequential semantics. Cursors are
+    absolute (they keep counting up forever), but storage is not: the
+    prefix every reader has consumed can never be read again and is
+    trimmed away, so a resident service holds O(unconsumed commands), not
+    the whole stream history."""
 
-    def __init__(self) -> None:
+    def __init__(self, n_readers: int) -> None:
         self._items: List[tuple] = []
+        self._base = 0                      # absolute index of _items[0]
+        self._cursors = [0] * n_readers
         self._lock = threading.Lock()
 
     def post(self, item: tuple) -> None:
         with self._lock:
             self._items.append(item)
 
-    def read_from(self, cursor: int) -> List[tuple]:
+    def read_from(self, cursor: int, reader: int) -> List[tuple]:
         with self._lock:
-            return self._items[cursor:]
+            self._cursors[reader] = cursor
+            low = min(self._cursors)
+            if low > self._base:
+                del self._items[:low - self._base]
+                self._base = low
+            return self._items[cursor - self._base:]
 
 
 @dataclass
@@ -169,6 +184,7 @@ class Client:
         self.weight = weight
         self.max_inflight_tasks = max_inflight_tasks
         self.namespace = namespace if namespace is not None else name
+        self._map_seq = itertools.count()
         self.inflight_tasks = 0
         self.stats = {"submitted": 0, "completed": 0, "failed": 0,
                       "tasks": 0, "bytes": 0, "wall_seconds": 0.0}
@@ -177,24 +193,33 @@ class Client:
                owner_map: Optional[Callable] = None,
                priority: float = 0.0,
                namespace: Optional[str] = None,
+               ephemeral: bool = False,
                timeout: Optional[float] = None) -> SubmissionFuture:
         """Submit one PTG against a namespace; returns a future for its
         written blocks. External reads (blocks no task of this graph
         writes first) bind to the namespace — earlier submissions' final
         writes win over ``blocks``' initial values. Blocks of the graph
-        must keep one owner across the namespace's submissions."""
+        must keep one owner across the namespace's submissions.
+        ``ephemeral=True`` declares that no later submission will target
+        the namespace: its block state is dropped wholesale once this
+        submission resolves, instead of its last versions living on as
+        the namespace's durable values."""
         n_tasks = sum(1 for _ in graph._program_iter())
         return self._svc._admit(
             self, graph, dict(blocks or {}), dict(bodies or {}),
             owner_map=owner_map, priority=priority,
             namespace=namespace if namespace is not None else self.namespace,
-            n_tasks=n_tasks, timeout=timeout)
+            ephemeral=ephemeral, n_tasks=n_tasks, timeout=timeout)
 
     def map(self, fn: Callable, values, *,
             priority: float = 0.0) -> SubmissionFuture:
         """Embarrassingly parallel convenience: one task per element of
         ``values``, sharded round-robin; ``result()`` returns the mapped
-        list in order. Runs in a private throwaway namespace."""
+        list in order. Each call runs in its own private throwaway
+        namespace (unique per call — reusing one would bind this call's
+        ``("x", i)`` reads to a previous call's seeds, since a namespace
+        honors initial values only on virgin timelines) that is dropped
+        wholesale once the call resolves."""
         from repro.ptg import Graph, IndexSpace
 
         vals = list(values)
@@ -211,7 +236,8 @@ class Client:
                         size=len(vals)))
         blocks = {("x", i): np.asarray(v) for i, v in enumerate(vals)}
         fut = self.submit(g, blocks, {"map": fn}, priority=priority,
-                          namespace=f"{self.name}/map")
+                          namespace=f"{self.name}/map{next(self._map_seq)}",
+                          ephemeral=True)
         fut._transform = lambda out: [out[("y", i)]
                                       for i in range(len(vals))]
         return fut
@@ -239,7 +265,7 @@ class SchedulerService:
         self.n_shards = n_shards
         self.n_threads = n_threads
         self.timeout = timeout
-        self.bus = _Bus()
+        self.bus = _Bus(n_shards)
         self.draining = threading.Event()  # run_ranks arms its deadline here
         self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
@@ -331,7 +357,7 @@ class SchedulerService:
     # ----------------------------------------------------------- admission
 
     def _admit(self, client: Client, graph, blocks, bodies, *,
-               owner_map, priority, namespace, n_tasks,
+               owner_map, priority, namespace, ephemeral, n_tasks,
                timeout) -> SubmissionFuture:
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._cond:
@@ -355,7 +381,8 @@ class SchedulerService:
             sub_id = self._next_sub
             self._next_sub += 1
             sub = Submission(sub_id, client.name, namespace, graph, blocks,
-                             bodies, owner_map, priority, n_tasks)
+                             bodies, owner_map, priority, n_tasks,
+                             ephemeral=ephemeral)
             fut = SubmissionFuture(sub_id, client.name, n_tasks)
             self._subs[sub_id] = _SubRecord(
                 sub, fut, set(range(self.n_shards)), t0=time.monotonic())
@@ -373,6 +400,8 @@ class SchedulerService:
             rec = self._subs.get(sub_id)
             if rec is None or rec.resolved:
                 return
+            if rank not in rec.pending_ranks:
+                return   # duplicate report: account each rank exactly once
             rec.pending_ranks.discard(rank)
             rec.published.update(published)
             client = self._clients[rec.sub.client]
@@ -385,6 +414,10 @@ class SchedulerService:
             client.stats["tasks"] += rec.sub.n_tasks
             client.stats["wall_seconds"] += time.monotonic() - rec.t0
             rec.future._complete(rec.published)
+            # the future owns the result now; every rank has assimilated
+            # (it reported done), so the record's payloads are dead weight
+            rec.published = {}
+            rec.sub.blocks = {}
             self._advance_watermark()
             self._cond.notify_all()
 
@@ -400,6 +433,9 @@ class SchedulerService:
             rec.future._fail(exc if isinstance(exc, SubmissionError)
                              else SubmissionError(
                                  f"submission {sub_id} failed: {exc!r}"))
+            # partial rank results are dead (sub.blocks stays: ranks that
+            # have not assimilated yet still read it off the bus)
+            rec.published = {}
             # every rank must learn: skip the sub's queued tasks, poison
             # the namespace versions it will never produce
             self.bus.post(("fail", sub_id))
@@ -412,8 +448,19 @@ class SchedulerService:
         while (w + 1) in self._subs and self._subs[w + 1].resolved:
             w += 1
         if w != self._resolved_through:
+            # records at or below the watermark are finished everywhere —
+            # evict them so frontdoor memory tracks in-flight work, not
+            # the stream's history
+            evicted = [self._subs.pop(s)
+                       for s in range(self._resolved_through + 1, w + 1)]
             self._resolved_through = w
             self.bus.post(("watermark", w))
+            for rec in evicted:
+                # after the watermark: ranks process the drop only once
+                # their retired-through covers the sub, so any straggler
+                # publish into the dead namespace is discarded, not kept
+                if rec.sub.ephemeral:
+                    self.bus.post(("drop_ns", rec.sub.namespace))
 
     # --------------------------------------------------------------- stats
 
@@ -465,6 +512,10 @@ class ShardRuntime:
         self.subs: Dict[int, SubmissionShard] = {}
         self.open: set = set()
         self.finished: set = set()
+        # guards the finished/open transition: a worker thread (last task
+        # completing) and the serve thread (assimilation-time remaining==0
+        # after held fulfillments) can race into _local_complete
+        self._fin_lock = threading.Lock()
         self.assimilated = 0    # highest sub_id ingested (bus order == id)
         self.cursor = 0
         self.tasks_run = 0
@@ -486,12 +537,14 @@ class ShardRuntime:
         while True:
             if self.ctx.comm.world.poison.is_set():
                 raise WorldPoisoned("world poisoned while serving")
-            for cmd in self.svc.bus.read_from(self.cursor):
+            for cmd in self.svc.bus.read_from(self.cursor, self.rank):
                 self.cursor += 1
                 self._apply(cmd)
             self.ctx.comm.progress()
-            if self._stop and not self.open:
-                return
+            if self._stop:
+                with self._fin_lock:
+                    if not self.open:
+                        return
             time.sleep(10e-6)
 
     def _apply(self, cmd: tuple) -> None:
@@ -502,6 +555,8 @@ class ShardRuntime:
             self._fail_cmd(cmd[1])
         elif kind == "watermark":
             self.ns.retire_through(cmd[1])
+        elif kind == "drop_ns":
+            self.ns.drop_namespace(cmd[1])
         elif kind == "stop":
             self._stop = True
 
@@ -648,10 +703,11 @@ class ShardRuntime:
 
     def _local_complete(self, shard: SubmissionShard) -> None:
         sub_id = shard.sub.sub_id
-        if sub_id in self.finished:
-            return
-        self.open.discard(sub_id)
-        self.finished.add(sub_id)
+        with self._fin_lock:
+            if sub_id in self.finished:
+                return
+            self.open.discard(sub_id)
+            self.finished.add(sub_id)
         with shard.lock:
             published = dict(shard.published)
         n_bytes = sum(getattr(v, "nbytes", 0) for v in published.values())
@@ -667,8 +723,9 @@ class ShardRuntime:
             if shard.failed:
                 return
             shard.failed = True
-        self.open.discard(sub_id)
-        self.finished.add(sub_id)
+        with self._fin_lock:
+            self.open.discard(sub_id)
+            self.finished.add(sub_id)
         self.svc._fail_submission(sub_id, exc)
         self.ns.poison_sub(sub_id)
         shard.drop()
@@ -679,8 +736,9 @@ class ShardRuntime:
         if shard is not None:
             with shard.lock:
                 shard.failed = True
-            self.open.discard(sub_id)
-            self.finished.add(sub_id)
+            with self._fin_lock:
+                self.open.discard(sub_id)
+                self.finished.add(sub_id)
             shard.drop()
             self.subs.pop(sub_id, None)
         self.ns.poison_sub(sub_id)

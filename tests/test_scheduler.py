@@ -101,6 +101,25 @@ def test_map_returns_ordered_results():
             [2 * i + 1 for i in range(9)]
 
 
+def test_repeated_map_uses_fresh_inputs_and_drops_namespaces():
+    """Regression: each map call must get its own namespace — a shared
+    one would bind the second call's ("x", i) reads to the FIRST call's
+    seeds (seed_initial honors only virgin timelines) and silently map fn
+    over stale inputs. The throwaway namespaces are also dropped once
+    resolved, so a map-heavy stream leaves no namespace residue."""
+    with SchedulerService(S, timeout=60.0) as svc:
+        c = svc.client("mapper")
+        a = c.map(lambda x: x + 1, np.arange(4, dtype=np.int64)).result(60.0)
+        b = c.map(lambda x: x * 10,
+                  np.arange(4, 8, dtype=np.int64)).result(60.0)
+        third = c.map(lambda x: -x, np.arange(2, dtype=np.int64)).result(60.0)
+    assert [int(v) for v in a] == [1, 2, 3, 4]
+    assert [int(v) for v in b] == [40, 50, 60, 70]   # not 0,10,20,30
+    assert [int(v) for v in third] == [0, -1]
+    # ephemeral namespaces were dropped after their watermark passed
+    assert all(s["ns_live_versions"] == 0 for s in svc.rank_summaries)
+
+
 # ----------------------------------------------------- isolation (property)
 
 @settings(deadline=None, max_examples=4,
@@ -240,6 +259,80 @@ def test_failed_submission_is_isolated_and_poisons_dependents():
         assert_blocks_equal(fb.result(60.0), ref_b)
     assert a.stats["failed"] == 2 and a.stats["completed"] == 0
     assert b.stats["failed"] == 0 and b.stats["completed"] == 1
+
+
+# ------------------------------------------- resolution finality + memory
+
+def test_publish_never_unpoisons_a_version():
+    """A straggler task of a failed submission finishing on another rank
+    publishes after the fail command poisoned the version: readers must
+    still see the failure — resolution is bus-order, not timing."""
+    from repro.sched.namespace import NamespaceShard
+    from repro.sched.state import LiveStats
+
+    ns = NamespaceShard(LiveStats())
+    ns.ensure_pending("n", "b", 1)
+    ns.poison_sub(1)
+    ns.publish("n", "b", 1, np.int64(5))   # late straggler
+    got = []
+    ns.bind("n", "b", 2, lambda v, p: got.append((v, p)))
+    assert got == [(None, True)]
+
+
+def test_publish_after_retirement_is_discarded():
+    """A publish whose (sub_id, 1) version retirement already dropped as
+    superseded must not re-insert it, and must not skew the block
+    counters the live_frac guard reads."""
+    from repro.sched.namespace import NamespaceShard
+    from repro.sched.state import LiveStats
+
+    stats = LiveStats()
+    ns = NamespaceShard(stats)
+    ns.ensure_pending("n", "b", 1)
+    ns.ensure_pending("n", "b", 2)
+    ns.publish("n", "b", 2, np.int64(7))
+    ns.retire_through(2)                    # drops the PENDING (1, 1)
+    before = stats.to_dict()
+    ns.publish("n", "b", 1, np.int64(3))    # straggler of a retired sub
+    ns.publish("n", "b", 2, np.int64(7))    # duplicate re-publish
+    assert ns.live_versions() == 1          # only the (2, 1) survivor
+    assert stats.to_dict() == before        # no double block_up
+    got = []
+    ns.bind("n", "b", 3, lambda v, p: got.append((int(v), p)))
+    assert got == [(7, False)]
+
+
+def test_bus_trims_prefix_all_readers_consumed():
+    from repro.sched.service import _Bus
+
+    bus = _Bus(2)
+    for i in range(10):
+        bus.post(("x", i))
+    assert bus.read_from(0, 0)[0] == ("x", 0)
+    assert len(bus.read_from(10, 0)) == 0   # reader 0 caught up
+    assert len(bus._items) == 10            # reader 1 still at 0
+    assert [i for _, i in bus.read_from(0, 1)] == list(range(10))
+    bus.read_from(10, 1)
+    assert len(bus._items) == 0             # both past: prefix trimmed
+    bus.post(("x", 10))
+    assert bus.read_from(10, 0) == [("x", 10)]   # absolute cursors still work
+
+
+def test_frontdoor_evicts_resolved_records():
+    """The service must not retain the stream's history: once the
+    watermark passes a submission, its frontdoor record (initial blocks,
+    published results) is gone — only the client-held future keeps the
+    result alive."""
+    blocks = taskbench_blocks(W, D, seed=5)
+    with SchedulerService(S, timeout=60.0) as svc:
+        c = svc.client("alice")
+        for j in range(3):
+            g, _ = taskbench_graph("stencil", W, D, S)
+            c.submit(g, blocks if j == 0 else {},
+                     taskbench_bodies()).result(60.0)
+    with svc._lock:
+        assert svc._subs == {}
+    assert svc.stats()["resolved_through"] == 3
 
 
 # ------------------------------------------------------------------ fairness
