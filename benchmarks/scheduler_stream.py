@@ -18,11 +18,21 @@ assimilation via ``derive_local`` -> namespace binding -> retirement):
   blocks ever materialized. ``live_frac`` is the retirement guard
   (deterministic up to watermark/assimilation races — guarded at the
   loose tolerance): near 1.0 means the service is accumulating history
-  instead of retiring it.
+  instead of retiring it;
+- ``sched_stream/recovery`` — the same chained stream with a resident
+  rank killed mid-stream by a seeded fault plan (plus loss+dup under
+  ``REPRO_CHAOS_EXTRA=lossdup``): ``sched_recover_ms`` is DEATH
+  declaration -> the at-death in-flight set drained (how long clients
+  feel the epoch change), and ``replay_frac`` is bus commands replayed
+  during adoption / commands ever posted (how much of the stream's
+  history recovery had to re-read — bounded by the unresolved window,
+  not the stream length). Both are guarded lower-is-better at the loose
+  timing tolerance.
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 from benchmarks.taskbench_scaling import (taskbench_blocks, taskbench_bodies,
@@ -32,8 +42,9 @@ N_SHARDS = 2
 WIDTH, DEPTH = 8, 6
 
 
-def _stream(n_clients: int, n_subs: int, bodies, *, chained: bool):
-    """Run the stream; returns (wall_seconds, total_tasks, stats)."""
+def _stream(n_clients: int, n_subs: int, bodies, *, chained: bool,
+            faults=None):
+    """Run the stream; returns (wall_seconds, total_tasks, svc)."""
     import threading
 
     from repro.sched import SchedulerService
@@ -41,7 +52,7 @@ def _stream(n_clients: int, n_subs: int, bodies, *, chained: bool):
     blocks = taskbench_blocks(WIDTH, DEPTH, seed=11)
     total_tasks = n_clients * n_subs * WIDTH * DEPTH
     t0 = time.perf_counter()
-    with SchedulerService(N_SHARDS, timeout=300.0) as svc:
+    with SchedulerService(N_SHARDS, timeout=300.0, faults=faults) as svc:
         def client_thread(i: int) -> None:
             c = svc.client(f"c{i}", weight=float(i + 1))
             futs = []
@@ -61,14 +72,15 @@ def _stream(n_clients: int, n_subs: int, bodies, *, chained: bool):
         for t in threads:
             t.join()
     wall = time.perf_counter() - t0
-    return wall, total_tasks, svc.stats()
+    return wall, total_tasks, svc
 
 
 def run(report) -> None:
     # near-empty bodies: the row measures the scheduler, not the math
     noop_bodies = {name: (lambda *ops: ops[0])
                    for name in taskbench_bodies()}
-    wall, n_tasks, stats = _stream(4, 6, noop_bodies, chained=False)
+    wall, n_tasks, svc = _stream(4, 6, noop_bodies, chained=False)
+    stats = svc.stats()
     overhead_us = wall / n_tasks * 1e6
     report("sched_stream/overhead", overhead_us,
            f"{4}x{6} subs, {n_tasks} tasks",
@@ -76,9 +88,35 @@ def run(report) -> None:
                   "submissions_per_s": round(4 * 6 / wall, 2),
                   "live_frac": round(stats["live_frac"], 4)})
 
-    wall, n_tasks, stats = _stream(1, 10, taskbench_bodies(), chained=True)
+    wall, n_tasks, svc = _stream(1, 10, taskbench_bodies(), chained=True)
+    stats = svc.stats()
     report("sched_stream/chained", wall / n_tasks * 1e6,
            f"10 chained subs, live {stats['blocks_hwm']}/"
            f"{stats['blocks_total']}",
            extra={"submissions_per_s": round(10 / wall, 2),
                   "live_frac": round(stats["live_frac"], 4)})
+
+    # survivability: kill rank 1 mid-stream; the chained stream must drain
+    # through adoption (replay from the frozen cursor + re-execution)
+    from repro.core.faults import FaultPlan
+
+    p = 0.1 if os.environ.get("REPRO_CHAOS_EXTRA") == "lossdup" else 0.0
+    plan = FaultPlan(seed=11, drop=p, duplicate=p, kill={1: 30},
+                     lease=0.4, heartbeat_every=0.02)
+    wall, n_tasks, svc = _stream(1, 10, taskbench_bodies(), chained=True,
+                                 faults=plan)
+    rep = svc.recovery_report.to_dict()
+    recover_ms = svc.capacity()["sched_recover_ms"]
+    if recover_ms is None:
+        recover_ms = 0.0   # the kill point was never reached
+    replay_frac = rep["bus_replayed"] / max(svc.bus.posted, 1)
+    report("sched_stream/recovery", recover_ms,
+           f"kill rank1@30, replayed {rep['bus_replayed']}/"
+           f"{svc.bus.posted} bus cmds, {rep['reexecuted_tasks']} tasks "
+           "re-executed",
+           extra={"sched_recover_ms": round(recover_ms, 2),
+                  "replay_frac": round(replay_frac, 4),
+                  "bus_replayed": rep["bus_replayed"],
+                  "reexecuted_tasks": rep["reexecuted_tasks"],
+                  "replayed_sends": rep["replayed_sends"],
+                  "submissions_per_s": round(10 / wall, 2)})

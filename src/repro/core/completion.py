@@ -145,6 +145,13 @@ class CompletionDetector:
         if self.rank == 0:
             self._step_rank0()
 
+    def poll_failures(self) -> None:
+        """Failure detection *only* — no COUNT/REQUEST rounds. The resident
+        scheduler's serve loop calls this: it must declare deaths between
+        submissions, but must never run the quiescence steps, which would
+        tear the world down at the first idle moment of the stream."""
+        self._step_failures()
+
     def _counts(self) -> Tuple[int, int]:
         return self.comm.effective_counts()
 

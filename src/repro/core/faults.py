@@ -71,7 +71,7 @@ class RecoveryReport:
     _COUNTERS = (
         "injected_drops", "injected_dups", "retries", "dup_suppressed",
         "replayed_sends", "reexecuted_tasks", "rederived_edges",
-        "forwarded_ams",
+        "forwarded_ams", "bus_replayed",
     )
 
     def __init__(self, total_edges: Optional[int] = None):

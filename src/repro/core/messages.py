@@ -521,6 +521,14 @@ class Communicator:
             else:
                 self._detector.on_message(wire)
 
+    def poll_failure_detector(self) -> None:
+        """Drive the attached detector's failure half only (lease checks and
+        DEATH declaration) — the resident scheduler's between-submissions
+        heartbeat of the membership protocol, with the quiescence rounds
+        deliberately left to the final ``tp.join()``."""
+        if self._detector is not None:
+            self._detector.poll_failures()
+
     def worker_idle(self) -> bool:
         return self._tp is None or self._tp.quiescent()
 

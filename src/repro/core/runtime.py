@@ -83,6 +83,10 @@ def run_ranks(
     (poison propagation, timeout forensics, error surfacing) is
     unchanged."""
     world = InProcWorld(n_ranks, delay_fn=delay_fn, faults=faults)
+    if serve_scheduler is not None:
+        # the resident service needs the world for recovery gating (is a
+        # fault plan active?), the dead set, and future-timeout forensics
+        serve_scheduler.attach_world(world)
     results = [None] * n_ranks
     errors: list = []
     ctxs: list = [None] * n_ranks

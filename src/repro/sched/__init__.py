@@ -5,15 +5,18 @@ Entry point: :class:`SchedulerService` (see :mod:`repro.sched.service`).
 
 from .fair import FairPolicy
 from .namespace import NamespaceShard
-from .service import (Client, SchedulerService, Submission, SubmissionError,
+from .service import (Client, DeadlineExceeded, RetryingFuture,
+                      SchedulerService, Submission, SubmissionError,
                       SubmissionFuture)
 from .state import LiveStats, SubmissionShard, TaskState
 
 __all__ = [
     "Client",
+    "DeadlineExceeded",
     "FairPolicy",
     "LiveStats",
     "NamespaceShard",
+    "RetryingFuture",
     "SchedulerService",
     "Submission",
     "SubmissionError",

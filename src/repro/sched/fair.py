@@ -46,3 +46,9 @@ class FairPolicy:
             self._lanes[client] = start + 1.0 / max(weight, 1e-9)
             self._vnow = start
             return bias - start
+
+    def snapshot(self) -> dict:
+        """Lane state for timeout forensics: which client's virtual time
+        is ahead says who the rank has been serving."""
+        with self._lock:
+            return {"vnow": self._vnow, "lanes": dict(self._lanes)}

@@ -74,17 +74,36 @@ class NamespaceShard:
 
     # -------------------------------------------------------------- writes
 
-    def seed_initial(self, ns: str, blk: B, sub_id: int, value) -> None:
+    def seed_initial(self, ns: str, blk: B, sub_id: int, value) -> bool:
         """Submission-provided initial value for an owned block — only
         honored on a virgin timeline: once any submission wrote (or is
         writing) the block, the namespace value is the truth and a later
-        submission's initial value is ignored."""
+        submission's initial value is ignored. A timeline holding *only*
+        POISONED versions counts as virgin again: every writer so far
+        failed, so a retry resubmitting the same inputs gets its seeds
+        honored instead of deterministically binding to the poison (the
+        FAIL command precedes the retry's SUBMIT in bus order, so the
+        decision is a pure function of the bus prefix on every rank).
+        Only versions *visible to this submission* (key < ``(sub_id, 0)``)
+        count: a later submission's publish racing ahead of this
+        assimilation — or a checkpoint restore inserting future-submission
+        versions before adoption replay — must not flip the decision, or
+        it would stop being a pure function of the bus prefix. (Safe
+        against retirement: a dropped earlier version implies a surviving
+        later version that is still < ``(sub_id, 0)``, since unresolved
+        submissions sit above the watermark.)
+        Returns True iff the seed was inserted (the owner reports honored
+        seeds to the frontdoor checkpoint for adoption replay)."""
         with self._lock:
             timeline = self._vers.setdefault((ns, blk), [])
-            if timeline:
-                return
-            timeline.append(_Version((sub_id, 0), AVAILABLE, value))
+            if any(v.key == (sub_id, 0) for v in timeline):
+                return True   # adoption replay re-seeding: already honored
+            if any(v.state != POISONED for v in timeline
+                   if v.key < (sub_id, 0)):
+                return False
+            self._insert(timeline, _Version((sub_id, 0), AVAILABLE, value))
         self._stats.block_up()
+        return True
 
     def ensure_pending(self, ns: str, blk: B, sub_id: int) -> None:
         """Owner-side assimilation of a final write: reserve the version so
@@ -132,6 +151,53 @@ class NamespaceShard:
         for cb in waiters:
             cb(value, False)
 
+    def restore(self, ns: str, blk: B, key: Tuple[int, int], state: str,
+                value=None) -> None:
+        """Insert an already-*resolved* version (AVAILABLE or POISONED)
+        verbatim — the frontdoor checkpoint recording a resolved
+        submission's effect, and an adopter reseeding its shard from that
+        checkpoint after a rank death. Idempotent; never downgrades: an
+        existing POISONED version stays poisoned, an existing AVAILABLE one
+        keeps its value, and a PENDING one is resolved in place (serving
+        its waiters). AVAILABLE restores for retired submissions are
+        discarded like straggler publishes; POISONED restores bypass that
+        guard — a poison that is the *latest* version of a retired timeline
+        is still the live binding target, and a superseded one is inert
+        residue the next ``retire_through`` drops."""
+        fresh = False
+        with self._lock:
+            timeline = self._vers.setdefault((ns, blk), [])
+            for v in timeline:
+                if v.key == key:
+                    break
+            else:
+                if state == AVAILABLE and key[0] <= self._retired:
+                    if not timeline:
+                        del self._vers[(ns, blk)]
+                    return
+                v = _Version(key, PENDING)
+                self._insert(timeline, v)
+            if v.state != PENDING:
+                return
+            fresh = state == AVAILABLE
+            v.state = state
+            v.value = value
+            waiters, v.waiters = v.waiters, []
+        if fresh:
+            self._stats.block_up()
+        for cb in waiters:
+            cb(value, state == POISONED)
+
+    def export(self) -> List[tuple]:
+        """Every resolved version, as ``(ns, blk, key, state, value)`` rows
+        feedable to :meth:`restore`. PENDING versions are excluded: they
+        belong to in-flight submissions, which adoption reconstructs by
+        replaying the bus, not by copying state."""
+        with self._lock:
+            return [(ns, blk, v.key, v.state, v.value)
+                    for (ns, blk), timeline in self._vers.items()
+                    for v in timeline if v.state != PENDING]
+
     @staticmethod
     def _insert(timeline: List[_Version], v: _Version) -> None:
         i = len(timeline)
@@ -169,20 +235,28 @@ class NamespaceShard:
 
     # ---------------------------------------------------------- lifecycle
 
-    def poison_sub(self, sub_id: int) -> None:
+    def poison_sub(self, sub_id: int) -> List[Tuple[str, B]]:
         """A submission failed: its unproduced (still PENDING) versions
         will never publish — poison them so readers fail loudly instead of
-        waiting forever. Versions it already published keep their value."""
+        waiting forever. Versions it already published keep their value.
+        Returns the ``(ns, blk)`` keys poisoned, so the owner rank can
+        report them to the frontdoor checkpoint (a poison can be the live
+        binding target of a timeline; an adopter reconstructing the
+        namespace without it would silently bind readers to stale earlier
+        data instead of failing them)."""
         fire: List[Callable] = []
+        keys: List[Tuple[str, B]] = []
         with self._lock:
-            for timeline in self._vers.values():
+            for (ns, blk), timeline in self._vers.items():
                 for v in timeline:
                     if v.key == (sub_id, 1) and v.state == PENDING:
                         v.state = POISONED
+                        keys.append((ns, blk))
                         fire.extend(v.waiters)
                         v.waiters = []
         for cb in fire:
             cb(None, True)
+        return keys
 
     def retire_through(self, watermark: int) -> None:
         """Drop versions superseded within the resolved prefix: any version

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import enum
 import threading
-from typing import Dict, Hashable, List
+from typing import Dict, Hashable, List, Optional
 
 K = Hashable
 B = Hashable
@@ -108,12 +108,24 @@ class SubmissionShard:
     O(owned edges) — exactly the state the view already materialized.
     """
 
-    def __init__(self, sub, view, tf, stats: LiveStats) -> None:
+    def __init__(self, sub, view, tf, stats: LiveStats,
+                 shard: Optional[int] = None) -> None:
         self.sub = sub
         self.view = view
         self.tf = tf
         self.stats = stats
+        # the logical shard this slice represents — equal to the hosting
+        # rank until a death moves it to an adopter (service routes by it)
+        self.shard = view.shard if shard is None else shard
         self.lock = threading.Lock()
+        # cross-shard fulfillments applied, keyed (consumer, producer):
+        # transport retransmits are deduped by seq, but recovery re-execution
+        # and send-log replay legitimately re-produce the same fulfillment —
+        # each promise must still be decremented exactly once
+        self.applied: set = set()
+        # initial-value seeds this shard's owner actually honored (reported
+        # to the frontdoor checkpoint at completion, for adoption replay)
+        self.seeded: Dict[B, object] = {}
         self.store: Dict[B, object] = {}
         self.state: Dict[K, TaskState] = {}   # absent == WAITING or RETIRED
         self.retired = 0

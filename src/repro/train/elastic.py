@@ -132,6 +132,17 @@ class ElasticController:
         if step_time is not None:
             self.stragglers.record(host, step_time)
 
+    def declare_failed(self, host: int, now: Optional[float] = None) -> None:
+        """Out-of-band death declaration: an authoritative source (the
+        runtime's completion-protocol DEATH broadcast) already knows the
+        host is gone — don't wait out the lease. Expressed through the
+        monitor (an infinitely stale heartbeat) so the next :meth:`poll`
+        emits the shrink plan through the one normal path; the never-seen
+        rule no longer protects the host because it is now "heard from"."""
+        if host in set(self.failed):
+            return
+        self.monitor.beat(host, -1e30 if now is None else now)
+
     def alive(self) -> List[int]:
         return [h for h in range(self.n_hosts) if h not in set(self.failed)]
 

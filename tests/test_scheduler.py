@@ -20,12 +20,23 @@ The contract under test, end to end:
   the blocks it never produced (dependent readers fail loudly), and
   leaves every other client untouched;
 - fairness: the weighted-fair policy is deterministic and orders ready
-  tasks by weighted virtual time.
+  tasks by weighted virtual time;
+- survivability: a resident rank killed mid-stream is adopted — the bus
+  is replayed from its frozen cursor, lost tasks re-execute, and every
+  surviving future resolves bit-identically (the kill-point sweep
+  property-tests this at arbitrary message indices, chained namespaces
+  included); deadlines shed cleanly (:class:`DeadlineExceeded`, never a
+  hang) and ``retries=`` resubmits shed attempts.
 
 These tests run unmodified under ``REPRO_CHAOS=loss|dup`` (the sched-soak
-CI leg): reliable delivery keeps a resident, lossy world correct.
+CI leg): reliable delivery keeps a resident, lossy world correct. The
+kill tests use explicit seeded fault plans instead (blanket kill
+injection would break stream-shape assertions like
+``ns_live_versions == 0``); ``REPRO_CHAOS_EXTRA=lossdup`` layers 10%
+loss+duplication onto those plans — the sched-soak ``kill+loss+dup`` leg.
 """
 
+import os
 import threading
 import time
 
@@ -33,8 +44,10 @@ import numpy as np
 import pytest
 from hypothesis import HealthCheck, given, settings, strategies as st
 
+from repro.core.faults import FaultPlan
 from repro.ptg import Graph, IndexSpace
-from repro.sched import FairPolicy, SchedulerService, SubmissionError
+from repro.sched import (DeadlineExceeded, FairPolicy, SchedulerService,
+                         SubmissionError)
 from repro.linalg.cholesky import (cholesky_bodies, cholesky_graph,
                                    make_spd_blocks)
 from benchmarks.taskbench_scaling import (taskbench_blocks, taskbench_bodies,
@@ -423,3 +436,249 @@ def test_acceptance_four_clients_eight_mixed_submissions():
     assert all(r["tasks_live"] == 0 for r in stats["ranks"])
     assert all(stats["clients"][f"t{i}"]["completed"] == 8 for i in range(4))
     assert stats["live_frac"] < 1.0   # retirement did retire
+
+
+# ------------------------------------------------------------ survivability
+
+def _extra_chaos() -> float:
+    """The sched-soak ``kill+loss+dup`` CI leg layers transport chaos on
+    top of the explicit kill plans via the environment."""
+    return 0.1 if os.environ.get("REPRO_CHAOS_EXTRA") == "lossdup" else 0.0
+
+
+def _kill_plan(rank: int, at: int, seed: int = 0) -> FaultPlan:
+    p = _extra_chaos()
+    return FaultPlan(seed=seed, drop=p, duplicate=p, kill={rank: at},
+                     lease=0.4, heartbeat_every=0.02)
+
+
+def test_kill_midstream_chained_results_bit_identical():
+    """The tentpole, directly: a chained-namespace stream (each submission
+    reads the previous one's writes) survives a resident rank dying
+    mid-stream — the adopter replays the bus from the frozen cursor,
+    re-executes the lost tasks, and every future resolves to exactly the
+    sequential one-shot oracle."""
+    m = 4
+    blocks = taskbench_blocks(W, D, seed=11)
+    refs = chained_refs("stencil", blocks, m, seed=11)
+    with SchedulerService(S, timeout=90.0,
+                          faults=_kill_plan(1, 8, seed=11)) as svc:
+        c = svc.client("alice")
+        futs = []
+        for j in range(m):
+            g, _ = taskbench_graph("stencil", W, D, S, seed=11)
+            futs.append(c.submit(g, blocks if j == 0 else {},
+                                 taskbench_bodies()))
+        outs = [f.result(90.0) for f in futs]
+    for out, ref in zip(outs, refs):
+        assert_blocks_equal(out, ref)
+    r = svc.recovery_report.to_dict()
+    assert r["deaths"] == [1]
+    assert r["bus_replayed"] > 0          # adoption replayed the bus
+    cap = svc.capacity()
+    assert cap["degraded"] and cap["live_ranks"] == S - 1
+    assert cap["sched_recover_ms"] is not None
+
+
+@settings(deadline=None, max_examples=6,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(at=st.integers(1, 60), seed=st.integers(0, 100))
+def test_kill_point_sweep_no_hang_any_message_index(at, seed):
+    """Property: kill rank 1 at ANY user-AM send index during a chained
+    stream. Whatever the cut point — mid-assimilation, mid-fetch, between
+    submissions, or never reached — the stream must drain with every
+    result bit-identical (no deadlines are set, so nothing may shed, and
+    a hang fails the future timeout loudly)."""
+    m = 3
+    blocks = taskbench_blocks(W, D, seed=seed)
+    refs = chained_refs("stencil", blocks, m, seed=seed)
+    with SchedulerService(S, timeout=60.0,
+                          faults=_kill_plan(1, at, seed=seed)) as svc:
+        c = svc.client("alice")
+        futs = []
+        for j in range(m):
+            g, _ = taskbench_graph("stencil", W, D, S, seed=seed)
+            futs.append(c.submit(g, blocks if j == 0 else {},
+                                 taskbench_bodies()))
+        outs = [f.result(60.0) for f in futs]
+    for out, ref in zip(outs, refs):
+        assert_blocks_equal(out, ref)
+
+
+def test_acceptance_kill_four_clients_eight_mixed_submissions():
+    """ISSUE acceptance, adversarial edition: the 4 clients x 8 mixed
+    submissions scenario with a resident rank killed mid-stream (plus 10%
+    loss+dup under REPRO_CHAOS_EXTRA=lossdup). Independent namespaces, no
+    deadlines: every single result must be bit-identical to its one-shot
+    oracle."""
+    patterns = ("stencil", "fft", "tree", "random")
+    tb_blocks = taskbench_blocks(W, D, seed=7)
+    tb_bodies = taskbench_bodies()
+    ch_blocks, _ = make_spd_blocks(4, 4, seed=7)
+    ch_bodies = cholesky_bodies()
+
+    def written_ref(make_graph, blocks, bodies):
+        out = make_graph().run_host(blocks, bodies, n_threads=2)
+        eager = make_graph().build()
+        written = {eager.block_of(k) for k in eager.tasks}
+        return {blk: v for blk, v in out.items() if blk in written}
+
+    refs = {p: written_ref(
+        lambda p=p: taskbench_graph(p, W, D, S, seed=7)[0],
+        tb_blocks, tb_bodies) for p in patterns}
+    refs["cholesky"] = written_ref(lambda: cholesky_graph(4, 2, 1, 4),
+                                   ch_blocks, ch_bodies)
+
+    results = {}
+    with SchedulerService(S, timeout=180.0,
+                          faults=_kill_plan(1, 40, seed=7)) as svc:
+        def run_client(name, weight):
+            c = svc.client(name, weight=weight)
+            futs = []
+            for j in range(8):
+                ns = f"{name}/{j}"
+                if j == 7:
+                    futs.append(("cholesky", c.submit(
+                        cholesky_graph(4, 2, 1, 4), ch_blocks, ch_bodies,
+                        namespace=ns)))
+                else:
+                    p = patterns[j % 4]
+                    g, _ = taskbench_graph(p, W, D, S, seed=7)
+                    futs.append((p, c.submit(g, tb_blocks, tb_bodies,
+                                             namespace=ns)))
+            results[name] = [(kind, f.result(180.0)) for kind, f in futs]
+
+        threads = [threading.Thread(target=run_client,
+                                    args=(f"t{i}", float(i + 1)),
+                                    daemon=True)
+                   for i in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(180.0)
+
+    assert sorted(results) == [f"t{i}" for i in range(4)]
+    for name, rows in results.items():
+        assert len(rows) == 8
+        for kind, out in rows:
+            assert_blocks_equal(out, refs[kind])
+    assert svc.recovery_report.to_dict()["deaths"] == [1]
+
+
+def test_deadline_sheds_cleanly_and_stream_continues():
+    """An over-deadline submission is shed through the FAIL path: the
+    future raises DeadlineExceeded (never hangs), its namespace versions
+    are poisoned (dependents fail loudly), and an unrelated later
+    submission on the same client still runs."""
+    gate = threading.Event()
+    bodies = {"t": lambda x: (gate.wait(30.0), x + 1.0)[1]}
+    blocks = {("g", 0): np.float64(1.0)}
+    with SchedulerService(1, timeout=60.0) as svc:
+        c = svc.client("slow")
+        f = c.submit(_single_type_graph("stuck", 1), blocks, bodies,
+                     namespace="stuck", deadline=0.25)
+        with pytest.raises(DeadlineExceeded):
+            f.result(30.0)
+        # the shed poisoned what it never produced: a dependent reader in
+        # the same namespace fails loudly instead of waiting forever
+        fdep = c.submit(_single_type_graph("dep", 1), {},
+                        {"t": lambda x: x + 1.0}, namespace="stuck")
+        with pytest.raises(SubmissionError, match="upstream"):
+            fdep.result(30.0)
+        gate.set()   # release the stuck worker so close() can drain
+        # an unrelated namespace is untouched by the shed
+        ok = c.submit(_single_type_graph("ok", 1), blocks,
+                      {"t": lambda x: x + 1.0}, namespace="fresh")
+        assert ok.result(30.0)[("g", 0)] == 2.0
+    assert c.stats["failed"] == 2 and c.stats["completed"] == 1
+
+
+def test_retry_resubmits_after_deadline_shed():
+    """``retries=`` turns a shed into a backoff + resubmission: a body
+    that is slow exactly once gets shed on the first attempt and completes
+    on the second, under a fresh ephemeral namespace."""
+    calls = []
+
+    def fn(x):
+        if not calls:
+            calls.append(1)
+            time.sleep(1.0)
+        return x + 1
+
+    with SchedulerService(1, timeout=60.0) as svc:
+        c = svc.client("retrier")
+        fut = c.map(fn, np.arange(3, dtype=np.int64), deadline=0.3,
+                    retries=2)
+        assert [int(v) for v in fut.result(30.0)] == [1, 2, 3]
+        assert fut.attempts >= 2
+
+
+def test_degraded_admission_cap_tightens_to_survivors():
+    """Graceful degradation: with half the ranks dead, a client's
+    effective in-flight cap halves (floor 1) — backpressure matches the
+    surviving capacity instead of queueing at full speed."""
+    svc = SchedulerService(4)
+    assert svc._effective_cap(None) is None
+    assert svc._effective_cap(8) == 8
+    svc._dead_ranks = {1, 3}
+    assert svc._effective_cap(8) == 4
+    assert svc._effective_cap(1) == 1      # floor: progress stays possible
+    svc._dead_ranks = {1, 2, 3}
+    assert svc._effective_cap(8) == 2
+
+
+def test_future_timeout_dumps_protocol_snapshot():
+    """A future timeout names the stuck side: per-rank serve-loop state,
+    bus cursors, and the unresolved map ride along with the error."""
+    gate = threading.Event()
+    bodies = {"t": lambda x: (gate.wait(30.0), x + 1.0)[1]}
+    blocks = {("g", 0): np.float64(0)}
+    with SchedulerService(1, timeout=60.0) as svc:
+        c = svc.client("alice")
+        f = c.submit(_single_type_graph("a", 1), blocks, bodies)
+        with pytest.raises(TimeoutError) as ei:
+            f.result(0.3)
+        msg = str(ei.value)
+        assert "scheduler snapshot" in msg
+        assert "bus:" in msg and "unresolved" in msg and "rank 0:" in msg
+        gate.set()
+        f.result(30.0)
+
+
+def test_bus_freeze_pins_trim_until_adoption_votes():
+    """The bus-trim invariant behind adoption replay: a frozen (dead)
+    reader's cursor pins the prefix — fast survivors cannot trim past it —
+    until every adopter has voted ``retire_reader``; then the prefix goes,
+    and a replay below the trimmed base fails loudly instead of silently
+    skipping commands."""
+    from repro.sched.service import _Bus
+
+    bus = _Bus(3)
+    for i in range(6):
+        bus.post(("x", i))
+    bus.read_from(2, 1)               # the doomed reader got through 2
+    bus.freeze(1)
+    assert bus.read_from(5, 1) == []  # a zombie read neither advances...
+    assert bus.frozen_cursor(1) == 2  # ...nor moves the frozen cursor
+    bus.read_from(6, 0)
+    bus.read_from(6, 2)               # both survivors fully caught up
+    assert bus._base == 2             # trim stopped AT the frozen cursor
+    assert [i for _, i in bus.read_range(2, 6)] == [2, 3, 4, 5]
+    # two adopters split the dead rank's shards: the first vote must not
+    # unpin the prefix the second still needs
+    bus.retire_reader(1, votes_needed=2)
+    assert bus._base == 2
+    assert [i for _, i in bus.read_range(2, 6)] == [2, 3, 4, 5]
+    bus.retire_reader(1, votes_needed=2)
+    assert bus._base == 6             # last vote: prefix released
+    with pytest.raises(RuntimeError, match="trimmed prefix"):
+        bus.read_range(2, 6)
+    # the floor pins the trim the same way (oldest unresolved SUBMIT)
+    bus2 = _Bus(1)
+    bus2.post(("a",), pin=True)
+    bus2.post(("b",))
+    bus2.read_from(2, 0)
+    assert bus2._base == 0            # floor held the prefix
+    bus2.set_floor(None)
+    bus2.read_from(2, 0)
+    assert bus2._base == 2
