@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   scheduler_stream   resident multi-tenant scheduler: per-task overhead of
                      the submission-stream path (sched_overhead_us) and
                      retirement health (live_frac), both guarded lower
+  transport          per-comm-backend AM ping-pong latency (am_rtt_us,
+                     guarded lower at the loose tol) and 1 MiB one-way
+                     bandwidth, inproc threads vs multiproc OS processes
   roofline           §Roofline (reads reports/dryrun JSONs)
 
 ``--json [PATH]`` additionally writes a ``BENCH_<utc>.json`` artifact with
@@ -79,7 +82,7 @@ def main() -> None:
     from benchmarks import (cholesky_scaling, discovery_scaling,
                             gemm_scaling, micro_deps, micro_overhead,
                             recovery, roofline, scheduler_stream,
-                            taskbench_scaling)
+                            taskbench_scaling, transport)
 
     modules = {
         "micro_overhead": micro_overhead,
@@ -90,6 +93,7 @@ def main() -> None:
         "discovery_scaling": discovery_scaling,
         "recovery": recovery,
         "scheduler_stream": scheduler_stream,
+        "transport": transport,
         "roofline": roofline,
     }
     if args.only:

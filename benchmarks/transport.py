@@ -1,0 +1,94 @@
+"""Transport benchmark: what each comm backend charges per active message.
+
+One row pair per registered backend (``repro.core.comm``):
+
+- ``transport/<backend>/rtt`` — rank 0 ping-pongs a small AM with rank 1
+  through the full reliable-delivery stack (sequencing, dedup windows,
+  ACKs); the paper's one-sided-latency microbenchmark. ``am_rtt_us`` is
+  guarded lower-is-better at the loose ``--tol 1.0`` CI leg: inproc RTT
+  is queue hand-off cost, multiproc RTT adds two localhost TCP hops and
+  two cloudpickle round trips, and only an order-of-magnitude blow-up
+  (a progress-loop or framing regression) fails the job;
+- ``transport/<backend>/bandwidth`` — windowed one-way stream of 1 MiB
+  payload AMs rank 0 -> rank 1, closed by a single done-reply;
+  ``am_mb_s`` is reported, not guarded (pure memory/loopback throughput,
+  noisy on shared CI).
+
+The ping-pong main drives ``ctx.comm.progress()`` explicitly between
+sends — the §II-B2 model where the main thread is the progress thread —
+so the row measures the transport, not a scheduler hand-off.
+"""
+
+from __future__ import annotations
+
+import time
+
+RTT_WARMUP = 10
+RTT_ROUNDS = 200
+BW_CHUNK = 1 << 20   # 1 MiB per send
+BW_SENDS = 32
+
+
+def _pingpong_main(ctx):
+    """Both ranks register the same AMs in the same order (§II-B2 AM
+    identity); only rank 0 drives the measurement loops."""
+    import numpy as np
+
+    pongs = []
+    done = []
+
+    # registration order: ping, pong, sink, fin — identical on every rank
+    ping = ctx.comm.make_active_msg(lambda i: pong.send(0, i))
+    pong = ctx.comm.make_active_msg(lambda i: pongs.append(i))
+    sink = ctx.comm.make_active_msg(lambda blob: None)
+    fin_reply = ctx.comm.make_active_msg(lambda n: done.append(n))
+    recvd = []
+    fin = ctx.comm.make_active_msg(lambda n: (recvd.append(n),
+                                              fin_reply.send(0, n)))
+
+    out = None
+    if ctx.rank == 0:
+        for i in range(-RTT_WARMUP, RTT_ROUNDS):
+            if i == 0:
+                t0 = time.perf_counter()
+            ping.send(1, i)
+            want = i + RTT_WARMUP + 1
+            while len(pongs) < want:
+                ctx.comm.progress()
+                # yield the GIL: a tight spin starves the peer/receiver
+                # thread for a whole 5ms switch interval per hand-off
+                time.sleep(1e-5)
+        rtt_us = (time.perf_counter() - t0) / RTT_ROUNDS * 1e6
+
+        blob = np.zeros(BW_CHUNK, np.uint8)
+        t0 = time.perf_counter()
+        for _ in range(BW_SENDS):
+            sink.send(1, blob)
+        fin.send(1, BW_SENDS)
+        while not done:
+            ctx.comm.progress()
+            time.sleep(1e-5)
+        mb_s = BW_SENDS * BW_CHUNK / (time.perf_counter() - t0) / 1e6
+        out = (rtt_us, mb_s)
+    ctx.barrier_free_join()
+    return out
+
+
+def _measure(backend: str):
+    from repro.core import run_ranks
+
+    return run_ranks(2, _pingpong_main, n_threads=1, transport=backend)[0]
+
+
+def run(report) -> None:
+    from repro.core import backend_names
+
+    for backend in sorted(backend_names()):
+        rtt_us, mb_s = _measure(backend)
+        report(f"transport/{backend}/rtt", rtt_us,
+               f"{RTT_ROUNDS} small-AM round trips rank0<->rank1",
+               extra={"backend": backend, "am_rtt_us": round(rtt_us, 3)})
+        report(f"transport/{backend}/bandwidth",
+               BW_CHUNK / mb_s if mb_s else 0.0,
+               f"{BW_SENDS}x{BW_CHUNK >> 20}MiB one-way, windowed",
+               extra={"backend": backend, "am_mb_s": round(mb_s, 1)})

@@ -10,6 +10,7 @@ Compiled layer (TPU-native adaptation):
   schedule.py).
 """
 
+from .comm import backend_names, get_backend, register_backend
 from .completion import CompletionDetector
 from .faults import FaultPlan, RecoveryReport
 from .messages import (ActiveMsg, Communicator, InProcWorld, RankKilled,
@@ -23,5 +24,6 @@ __all__ = [
     "ActiveMsg", "Communicator", "CompletionDetector", "FaultPlan",
     "InProcWorld", "RankContext", "RankKilled", "READ", "READWRITE",
     "RecoveryReport", "STFGraph", "Task", "Taskflow", "Threadpool",
-    "WorldPoisoned", "WRITE", "run_ranks", "view",
+    "WorldPoisoned", "WRITE", "backend_names", "get_backend",
+    "register_backend", "run_ranks", "view",
 ]

@@ -85,6 +85,17 @@ class RecoveryReport:
         self.recovery_seconds: Optional[float] = None
         self._death_declared_at: Optional[float] = None
 
+    def __getstate__(self) -> dict:
+        # the report crosses process boundaries on the multiproc transport
+        # (each rank ships its tally home for merging): drop the lock
+        state = self.__dict__.copy()
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state: dict) -> None:
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
     def bump(self, counter: str, n: int = 1) -> None:
         with self._lock:
             setattr(self, counter, getattr(self, counter) + n)

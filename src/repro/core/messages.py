@@ -22,10 +22,13 @@ Semantics kept faithful to the paper:
   ``p_r``); protocol traffic (completion detection, acks, heartbeats,
   retransmits) is excluded, exactly as required by §II-B3 step 1.
 
-The "network" here is :class:`InProcWorld`: one inbox per rank, with
-injectable per-message delivery delay and reordering, and — via
-:class:`~repro.core.faults.FaultPlan` — message loss, duplication, and rank
-kills, so the completion protocol can be stress-tested adversarially.
+The "network" is any registered comm backend's world (see
+:mod:`repro.core.comm`): the default :class:`InProcWorld` keeps one inbox
+per rank in-process with injectable per-message delivery delay and
+reordering, and — via :class:`~repro.core.faults.FaultPlan` — message
+loss, duplication, and rank kills, so the completion protocol can be
+stress-tested adversarially; the ``multiproc`` world carries the same
+wires between real OS processes over loopback TCP.
 
 On top of the lossy wire the communicator runs a **reliable delivery
 layer**: every non-ack message carries a per-``(src, dst)`` sequence number;
@@ -39,24 +42,26 @@ counts a user AM once at first queue and ``p_r`` once at first (post-dedup)
 delivery; retransmits and duplicates touch neither counter.
 
 Semantically each rank is one MPI rank; the mapping to a real cluster is
-one process per node with this module's queues replaced by
+one process per node with the world's queues replaced by
 MPI_Isend/Iprobe/Irecv (the paper's transport) — the reliability protocol
-is transport-agnostic by construction.
+is transport-agnostic by construction: everything in this module programs
+against the world contract documented in :mod:`repro.core.comm.core`.
 """
 
 from __future__ import annotations
 
-import heapq
 import itertools
 import pickle
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
-from .faults import FaultPlan, RecoveryReport
+from .comm import InProcWorld  # noqa: F401  (compat re-export)
+from .comm import Wire as _Wire
+from .faults import FaultPlan
 
 # Transport-level kinds that are themselves the reliability mechanism and so
 # ride the raw (lossy) wire without sequence numbers.
@@ -81,150 +86,6 @@ class view:
 
     def __len__(self) -> int:
         return self.array.size
-
-
-@dataclass
-class _Wire:
-    """One message on the wire."""
-
-    kind: str          # "am" | "large_am" | protocol kinds | ACK | HB
-    src: int
-    am_id: int = -1
-    blob: bytes = b""          # pickled regular args
-    raw: Optional[np.ndarray] = None  # large-AM view payload (no copy)
-    meta: Any = None           # protocol payload
-    seq: int = -1              # reliable-stream seq per (src, dst); -1 = raw
-
-
-class InProcWorld:
-    """Per-rank inboxes + adversarial delivery (delay / reorder / loss /
-    duplication / rank death)."""
-
-    def __init__(self, n_ranks: int,
-                 delay_fn: Optional[Callable[..., float]] = None,
-                 faults: Optional[FaultPlan] = None):
-        self.n_ranks = n_ranks
-        self.delay_fn = delay_fn
-        self.faults = faults
-        self.report = RecoveryReport()
-        # Set when any rank *fails* (exception): every other rank aborts
-        # instead of waiting forever inside the completion protocol.
-        self.poison = threading.Event()
-        self._locks = [threading.Lock() for _ in range(n_ranks)]
-        # Each inbox is a heap of (deliver_at, seq, wire).
-        self._inboxes: List[list] = [[] for _ in range(n_ranks)]
-        self._seq = itertools.count()
-        self._fingerprints: List[list] = [[] for _ in range(n_ranks)]
-        # Fault machinery: killed ranks, per-rank user-AM send counts (kill
-        # triggers), per-edge RNG streams, per-rank shutdown flags (the
-        # post-SHUTDOWN ack linger; see Communicator.run_until_shutdown).
-        self.dead: Set[int] = set()
-        self._fault_lock = threading.Lock()
-        self._user_sent = [0] * n_ranks
-        self._edge_rng: Dict[tuple, Any] = {}
-        self._shutdown_flags = [False] * n_ranks
-
-    # ----------------------------------------------------------- fault hooks
-
-    def check_dead_or_kill(self, src: int) -> bool:
-        """Called once per *user AM first-send* from ``src``; counts it
-        against the kill plan. True => the rank is (now) dead and the send
-        must be abandoned."""
-        if src in self.dead:
-            return True
-        f = self.faults
-        if f is None or src not in f.kill:
-            return False
-        with self._fault_lock:
-            self._user_sent[src] += 1
-            fire = self._user_sent[src] >= f.kill[src] and src not in self.dead
-        if fire:
-            self.kill(src)
-        return src in self.dead
-
-    def kill(self, rank: int) -> None:
-        """Physically silence ``rank``: no message from it is ever delivered
-        again, its inbox is discarded, undelivered messages it already sent
-        are purged. Idempotent; safe from any thread."""
-        with self._fault_lock:
-            if rank in self.dead:
-                return
-            self.dead.add(rank)
-        for r in range(self.n_ranks):
-            with self._locks[r]:
-                if r == rank:
-                    self._inboxes[r].clear()
-                else:
-                    kept = [item for item in self._inboxes[r]
-                            if item[2].src != rank]
-                    if len(kept) != len(self._inboxes[r]):
-                        heapq.heapify(kept)
-                        self._inboxes[r] = kept
-        # a dead rank cannot object to shutdown
-        self._shutdown_flags[rank] = True
-
-    def flag_shutdown(self, rank: int) -> None:
-        self._shutdown_flags[rank] = True
-
-    def all_shutdown(self) -> bool:
-        return all(self._shutdown_flags)
-
-    # ------------------------------------------------------------- transport
-
-    def send(self, dst: int, wire: _Wire) -> None:
-        if wire.src in self.dead or dst in self.dead:
-            return  # crashed endpoints: silently fenced
-        duplicate = False
-        f = self.faults
-        if f is not None and (f.drop or f.duplicate):
-            with self._fault_lock:
-                rng = self._edge_rng.get((wire.src, dst))
-                if rng is None:
-                    rng = self._edge_rng[(wire.src, dst)] = f.edge_rng(
-                        wire.src, dst)
-                # always draw both so the stream stays aligned per edge
-                dropped = rng.random() < f.drop
-                duplicate = rng.random() < f.duplicate
-            if dropped:
-                self.report.bump("injected_drops")
-                return
-            if duplicate:
-                self.report.bump("injected_dups")
-        self._deliver(dst, wire)
-        if duplicate:
-            self._deliver(dst, wire)
-
-    def _deliver(self, dst: int, wire: _Wire) -> None:
-        delay = self.delay_fn(wire.src, dst, wire.kind) if self.delay_fn \
-            else 0.0
-        deliver_at = time.monotonic() + delay
-        with self._locks[dst]:
-            heapq.heappush(self._inboxes[dst],
-                           (deliver_at, next(self._seq), wire))
-
-    def poll(self, rank: int) -> List[_Wire]:
-        """Pop every message whose delivery time has arrived."""
-        now = time.monotonic()
-        out: List[_Wire] = []
-        with self._locks[rank]:
-            inbox = self._inboxes[rank]
-            while inbox and inbox[0][0] <= now:
-                out.append(heapq.heappop(inbox)[2])
-        return out
-
-    def register_fingerprint(self, rank: int, fp: str) -> int:
-        """Record AM registration order; verify global consistency (§II-B2)."""
-        fps = self._fingerprints[rank]
-        am_id = len(fps)
-        fps.append(fp)
-        for other in range(self.n_ranks):
-            others = self._fingerprints[other]
-            if len(others) > am_id and others[am_id] != fp:
-                raise RuntimeError(
-                    f"active messages registered in different orders: rank {rank} "
-                    f"registered {fp!r} as id {am_id}, rank {other} has {others[am_id]!r}"
-                )
-        return am_id
 
 
 class ActiveMsg:
@@ -577,8 +438,7 @@ class Communicator:
                        for dst, pend in self._pending.items())
 
     def _has_traffic(self) -> bool:
-        with self.world._locks[self.rank]:
-            return bool(self.world._inboxes[self.rank])
+        return self.world.has_traffic(self.rank)
 
     # ---------------------------------------------------------- diagnostics
 

@@ -1,4 +1,4 @@
-"""Multi-rank execution context — one emulated MPI rank per thread-group.
+"""Multi-rank execution context — SPMD launch over a pluggable transport.
 
 ``run_ranks(n_ranks, main, n_threads=...)`` runs ``main(ctx)`` once per rank,
 SPMD-style, exactly like the paper's example program::
@@ -15,6 +15,14 @@ then, inside ``tp.join()``, the progress + completion-detection loop — and
 :class:`~repro.core.faults.FaultPlan`), to stress the completion protocol;
 with ``faults`` set, ``run_ranks`` returns ``(results, RecoveryReport)``.
 
+Where the ranks *live* is decided by ``transport=`` (or the
+``REPRO_TRANSPORT`` env var): the default ``inproc`` backend emulates each
+rank as a thread-group in this process; the ``multiproc`` backend forks one
+real OS process per rank and carries the same wire messages over loopback
+TCP sockets. Everything above the world contract — reliable delivery,
+completion detection, DEATH/epoch recovery, the scheduler — is identical
+on both. See :mod:`repro.core.comm`.
+
 Failure semantics:
 
 - a rank killed by the fault plan simply stops (its result is ``None``;
@@ -25,22 +33,18 @@ Failure semantics:
 - a timeout raises with a per-rank forensic dump: which ranks are stuck and
   each stuck rank's last protocol state (counters, unacked sends, detector
   epoch/confirmations) instead of a bare TimeoutError.
-
-On a real cluster this module is replaced 1:1 by MPI (the transport is
-isolated behind ``InProcWorld``); everything above it is transport-agnostic.
 """
 
 from __future__ import annotations
 
-import threading
-import time
 import traceback
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+from .comm import get_backend
 from .completion import CompletionDetector
-from .faults import FaultPlan, RecoveryReport
-from .messages import Communicator, InProcWorld, RankKilled, WorldPoisoned
+from .faults import FaultPlan
+from .messages import Communicator, RankKilled, WorldPoisoned
 from .taskflow import Taskflow
 from .threadpool import Threadpool
 
@@ -61,6 +65,61 @@ class RankContext:
         self.tp.join()
 
 
+def rank_session(world, rank: int, main, n_threads: int):
+    """One rank's whole life, shared by every backend: build the
+    communicator / threadpool / detector stack on ``world``, run ``main``,
+    classify the outcome.
+
+    Returns ``(status, payload)`` with status one of ``"ok"`` (payload =
+    main's return value), ``"killed"`` (crashed by the fault plan — its
+    silence is the point, survivors recover), ``"poisoned"`` (victim of
+    another rank's failure; aborts quietly so the root cause is the only
+    error surfaced), or ``"error"`` (payload = the exception; the session
+    has already poisoned the world).
+    """
+    comm = Communicator(world, rank)
+    tp = Threadpool(n_threads, comm)
+    CompletionDetector(comm)
+    ctx = RankContext(rank, world.n_ranks, comm, tp)
+    world.attach_snapshot_provider(rank, comm.snapshot)
+    try:
+        return "ok", main(ctx)
+    except RankKilled:
+        tp.abort()
+        return "killed", None
+    except WorldPoisoned:
+        tp.abort()
+        return "poisoned", None
+    except BaseException as e:  # surfaced to the caller
+        comm.shutdown.set()
+        world.poison.set()  # unblock every other rank's join()
+        tp.abort()
+        return "error", e
+
+
+def format_rank_error(err: BaseException) -> str:
+    return "".join(traceback.format_exception(type(err), err,
+                                              err.__traceback__))
+
+
+def timeout_forensics(stuck, world, timeout: float) -> str:
+    """Per-rank protocol state for the deadlock report: which ranks hung,
+    and what their communicator/scheduler last looked like. ``stuck`` is a
+    list of rank numbers; each snapshot is pulled through the world's
+    snapshot providers (cross-process safe)."""
+    lines = [
+        f"{len(stuck)} rank thread(s) did not finish within {timeout}s "
+        "(possible completion-protocol deadlock):"
+    ]
+    for rank in stuck:
+        snap = world.snapshot_rank(rank)
+        if snap is None:
+            lines.append(f"  rank {rank}: stuck before context creation")
+        else:
+            lines.append(f"  rank {rank}: {snap}")
+    return "\n".join(lines)
+
+
 def run_ranks(
     n_ranks: int,
     main: Callable[[RankContext], object],
@@ -70,10 +129,14 @@ def run_ranks(
     faults: Optional[FaultPlan] = None,
     timeout: float = 120.0,
     serve_scheduler=None,
+    transport: Optional[str] = None,
 ):
-    """SPMD-launch ``main`` on ``n_ranks`` emulated ranks; returns per-rank
-    results (or ``(results, report)`` when ``faults`` is given). Raises on
+    """SPMD-launch ``main`` on ``n_ranks`` ranks; returns per-rank results
+    (or ``(results, report)`` when ``faults`` is given). Raises on
     per-rank exception or timeout (deadlock guard).
+
+    ``transport`` selects the registered comm backend (default: the
+    ``REPRO_TRANSPORT`` env var, else ``inproc``).
 
     ``serve_scheduler`` (a :class:`repro.sched.SchedulerService`) switches
     to resident mode: ranks stay alive between submissions for as long as
@@ -82,83 +145,7 @@ def run_ranks(
     posting STOP) — an idle resident rank is not a hang. Everything else
     (poison propagation, timeout forensics, error surfacing) is
     unchanged."""
-    world = InProcWorld(n_ranks, delay_fn=delay_fn, faults=faults)
-    if serve_scheduler is not None:
-        # the resident service needs the world for recovery gating (is a
-        # fault plan active?), the dead set, and future-timeout forensics
-        serve_scheduler.attach_world(world)
-    results = [None] * n_ranks
-    errors: list = []
-    ctxs: list = [None] * n_ranks
-
-    def rank_main(rank: int) -> None:
-        comm = Communicator(world, rank)
-        tp = Threadpool(n_threads, comm)
-        CompletionDetector(comm)
-        ctx = RankContext(rank, n_ranks, comm, tp)
-        ctxs[rank] = ctx
-        try:
-            results[rank] = main(ctx)
-        except RankKilled:
-            # this rank was crashed by the fault plan: its silence is the
-            # point — survivors recover; nothing to report, nothing to keep
-            results[rank] = None
-            tp.abort()
-        except WorldPoisoned:
-            # victim of another rank's failure: abort quietly so the root
-            # cause below is the only error surfaced
-            tp.abort()
-        except BaseException as e:  # surfaced to the caller
-            errors.append((rank, e))
-            comm.shutdown.set()
-            world.poison.set()  # unblock every other rank's join()
-            tp.abort()
-
-    threads = [
-        threading.Thread(target=rank_main, args=(r,), daemon=True, name=f"rank{r}")
-        for r in range(n_ranks)
-    ]
-    for t in threads:
-        t.start()
-    if serve_scheduler is not None:
-        while not serve_scheduler.draining.wait(timeout=0.25):
-            if world.poison.is_set() or errors:
-                break   # a rank died while serving: fall through and join
-    deadline = time.monotonic() + timeout
-    stuck = []
-    for t in threads:
-        t.join(timeout=max(0.0, deadline - time.monotonic()))
-        if t.is_alive():
-            stuck.append(t)
-    if stuck:
-        world.poison.set()  # let salvageable ranks unwind before reporting
-        raise TimeoutError(_timeout_forensics(stuck, ctxs, timeout))
-    if errors:
-        rank, err = errors[0]
-        tb = "".join(traceback.format_exception(type(err), err,
-                                                err.__traceback__))
-        raise RuntimeError(f"rank {rank} failed:\n{tb}") from err
-    if faults is not None:
-        return results, world.report
-    return results
-
-
-def _timeout_forensics(stuck, ctxs, timeout: float) -> str:
-    """Per-rank protocol state for the deadlock report: which ranks hung,
-    and what their communicator/detector last looked like."""
-    lines = [
-        f"{len(stuck)} rank thread(s) did not finish within {timeout}s "
-        "(possible completion-protocol deadlock):"
-    ]
-    for t in stuck:
-        rank = int(t.name.replace("rank", ""))
-        ctx = ctxs[rank]
-        if ctx is None:
-            lines.append(f"  rank {rank}: stuck before context creation")
-            continue
-        try:
-            snap = ctx.comm.snapshot()
-        except Exception as e:  # forensics must never mask the timeout
-            snap = f"<snapshot failed: {e!r}>"
-        lines.append(f"  rank {rank}: {snap}")
-    return "\n".join(lines)
+    backend = get_backend(transport)
+    return backend.run_ranks(
+        n_ranks, main, n_threads=n_threads, delay_fn=delay_fn,
+        faults=faults, timeout=timeout, serve_scheduler=serve_scheduler)

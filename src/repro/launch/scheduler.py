@@ -42,15 +42,19 @@ def run_stream(svc, n_clients: int, n_submissions: int, *, width: int,
     from benchmarks.taskbench_scaling import (taskbench_blocks,
                                               taskbench_bodies,
                                               taskbench_graph)
-    from repro.linalg.cholesky import (cholesky_bodies, cholesky_graph,
-                                       make_spd_blocks)
+    from repro.linalg.cholesky import (cholesky_bodies,
+                                       cholesky_bodies_numpy,
+                                       cholesky_graph, make_spd_blocks)
 
     patterns = ("stencil", "fft", "tree", "random")
     n = svc.n_shards
     tb_blocks = taskbench_blocks(width, depth, seed=seed)
     tb_bodies = taskbench_bodies()
     ch_blocks, _ = make_spd_blocks(nb, 4, seed=seed)
-    ch_bodies = cholesky_bodies()
+    # forked rank processes must not call into the parent's XLA runtime
+    ch_bodies = cholesky_bodies_numpy() \
+        if getattr(svc, "transport", None) == "multiproc" \
+        else cholesky_bodies()
     results: dict = {}
 
     def client_thread(name: str, weight: float) -> None:
@@ -110,6 +114,10 @@ def main() -> None:
                     help="per-submission deadline in seconds")
     ap.add_argument("--seed", type=int, default=0,
                     help="fault-injection RNG seed")
+    ap.add_argument("--transport", default=None,
+                    choices=("inproc", "multiproc"),
+                    help="comm backend the resident ranks run on "
+                         "(multiproc = one OS process per rank)")
     args = ap.parse_args()
 
     # benchmarks/ lives at the repo root, beside src/
@@ -132,7 +140,8 @@ def main() -> None:
 
     t0 = time.monotonic()
     with SchedulerService(args.shards, n_threads=args.threads,
-                          timeout=300.0, faults=plan) as svc:
+                          timeout=300.0, faults=plan,
+                          transport=args.transport) as svc:
         results = run_stream(svc, args.clients, args.submissions,
                              width=args.width, depth=args.depth, nb=args.nb,
                              deadline=args.deadline)
@@ -172,16 +181,19 @@ def main() -> None:
         from benchmarks.taskbench_scaling import (taskbench_blocks,
                                                   taskbench_bodies,
                                                   taskbench_graph)
-        from repro.linalg.cholesky import (cholesky_bodies, cholesky_graph,
-                                           make_spd_blocks)
+        from repro.linalg.cholesky import (cholesky_bodies,
+                                           cholesky_bodies_numpy,
+                                           cholesky_graph, make_spd_blocks)
 
         tb_blocks = taskbench_blocks(args.width, args.depth, seed=7)
         ch_blocks, _ = make_spd_blocks(args.nb, 4, seed=7)
+        ch_bodies = cholesky_bodies_numpy() \
+            if args.transport == "multiproc" else cholesky_bodies()
         refs = {}
         for kind in {k for rows in results.values() for k, _ in rows}:
             if kind == "cholesky":
                 refs[kind] = cholesky_graph(args.nb, args.shards, 1, 4) \
-                    .run_host(ch_blocks, cholesky_bodies(),
+                    .run_host(ch_blocks, ch_bodies,
                               n_threads=args.threads)
             else:
                 g, _ = taskbench_graph(kind, args.width, args.depth,

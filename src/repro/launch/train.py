@@ -51,6 +51,13 @@ def main() -> None:
     ap.add_argument("--lease", type=float, default=2.0,
                     help="steps without a heartbeat before a host is "
                          "declared dead (--elastic)")
+    ap.add_argument("--transport", default=None,
+                    choices=("inproc", "multiproc"),
+                    help="with --elastic: comm backend for the cross-host "
+                         "control-plane preflight (every host exchanges "
+                         "active messages over it before the step loop — "
+                         "multiproc proves the path out of the process, "
+                         "the jax.distributed-style bootstrap)")
     args = ap.parse_args()
 
     if args.host_devices:
@@ -88,6 +95,8 @@ def main() -> None:
         if args.kill_host:
             kh, ka = args.kill_host.split("@")
             kill_host, kill_at = int(kh), int(ka)
+        if args.transport:
+            _transport_preflight(args.transport, fake_hosts)
 
     devices = list(all_devices)
     shape_override = None  # set by a re-mesh plan after a host failure
@@ -102,6 +111,34 @@ def main() -> None:
         devices = [all_devices[h * chips_per_host + c]
                    for h in plan.survivors for c in range(chips_per_host)]
         shape_override = plan.mesh_shape
+
+
+def _preflight_main(ctx):
+    got = []
+    am = ctx.comm.make_active_msg(lambda src: got.append(src))
+    for d in range(ctx.n_ranks):
+        if d != ctx.rank:
+            am.send(d, ctx.rank)
+    ctx.barrier_free_join()
+    return len(got)
+
+
+def _transport_preflight(transport: str, n_hosts: int) -> None:
+    """Cross-host control-plane bootstrap over the pluggable comm backend
+    (``repro.core.comm``): every host sends an active message to every
+    other and distributed completion drains the full set — the
+    jax.distributed-style rendezvous, run over real OS processes under
+    ``--transport multiproc``. Fails loudly before the step loop if any
+    host pair cannot exchange messages."""
+    from repro.core import run_ranks
+
+    t0 = time.time()
+    counts = run_ranks(n_hosts, _preflight_main, transport=transport)
+    dt = time.time() - t0
+    if counts != [n_hosts - 1] * n_hosts:
+        sys.exit(f"transport preflight failed: per-host AM counts {counts}")
+    print(f"transport preflight [{transport}]: {n_hosts} hosts all-to-all "
+          f"({n_hosts * (n_hosts - 1)} AMs) in {dt * 1e3:.1f}ms", flush=True)
 
 
 def _run_epoch(args, cfg, seq, global_batch, devices, shape_override,

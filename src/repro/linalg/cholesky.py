@@ -150,6 +150,24 @@ def cholesky_bodies(matmul=None, trsm=None) -> Dict[str, object]:
     }
 
 
+def cholesky_bodies_numpy() -> Dict[str, object]:
+    """Fork-safe pure-numpy bodies. The ``multiproc`` transport forks one
+    process per rank; calling into an inherited XLA runtime from a forked
+    child can deadlock, so cross-process runs use these. Bit-identity
+    across transports holds when both sides run the *same* body set."""
+    import scipy.linalg as sla
+
+    def _trsm(a, l_kk):
+        return sla.solve_triangular(l_kk, a.T, lower=True, trans="N").T
+
+    return {
+        "potrf": lambda a: np.linalg.cholesky(a),
+        "trsm": _trsm,
+        "syrk": lambda a, l: a - l @ l.T,
+        "gemm": lambda a, li, lj: a - li @ lj.T,
+    }
+
+
 def make_spd_blocks(nb: int, b: int, seed: int = 0) -> Dict[Tuple, np.ndarray]:
     """Random SPD matrix, returned as lower-triangle blocks {("A", i, j)}."""
     rng = np.random.default_rng(seed)

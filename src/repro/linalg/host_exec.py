@@ -350,12 +350,15 @@ def run_host_ptg(
     faults: Optional[FaultPlan] = None,
     rederive: Optional[Callable] = None,
     total_edges: Optional[int] = None,
+    transport: Optional[str] = None,
 ):
     """Execute the PTG on ``spec.n_shards`` emulated ranks; returns all
     written blocks (gathered to the host) — or ``(blocks, RecoveryReport)``
     when a :class:`~repro.core.faults.FaultPlan` is given. ``rederive``
     (shard -> LocalView) lets adoption re-derive only the moved shard;
-    ``total_edges`` is the eager-edge denominator for ``rederived_frac``."""
+    ``total_edges`` is the eager-edge denominator for ``rederived_frac``.
+    ``transport`` picks the comm backend (``inproc``/``multiproc``) the
+    ranks run on."""
     n = spec.n_shards
 
     if faults is None:
@@ -373,7 +376,8 @@ def run_host_ptg(
             return {blk: arr for blk, arr in store.items()
                     if spec.owner(blk) % n == rank}
 
-        results = run_ranks(n, main, n_threads=n_threads, timeout=timeout)
+        results = run_ranks(n, main, n_threads=n_threads, timeout=timeout,
+                            transport=transport)
         merged: Dict[Hashable, np.ndarray] = {}
         for r in results:
             merged.update(r)
@@ -386,7 +390,8 @@ def run_host_ptg(
         return host.owned_blocks()
 
     results, report = run_ranks(n, main, n_threads=n_threads,
-                                timeout=timeout, faults=faults)
+                                timeout=timeout, faults=faults,
+                                transport=transport)
     report.total_edges = total_edges
     merged = {}
     for r in results:

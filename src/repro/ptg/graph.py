@@ -823,10 +823,12 @@ class Graph:
                              name=name or self.name)
 
     def run_host(self, blocks, bodies, *, n_threads: int = 2,
-                 timeout: float = 120.0, faults=None):
+                 timeout: float = 120.0, faults=None, transport=None):
         """Execute on the host TaskTorrent runtime (async tasks + active
         messages) across ``n_shards`` emulated ranks; returns the written
-        blocks gathered to the host.
+        blocks gathered to the host. ``transport`` picks the comm backend
+        the ranks run on (``inproc`` threads by default; ``multiproc``
+        puts every rank in its own OS process).
 
         With ``faults`` (a :class:`~repro.core.faults.FaultPlan`) the run
         goes through the fault-tolerant host runtime and returns
@@ -839,13 +841,14 @@ class Graph:
         spec = self.to_block_spec()
         if faults is None:
             return run_host_ptg(spec, blocks, bodies,
-                                n_threads=n_threads, timeout=timeout)
+                                n_threads=n_threads, timeout=timeout,
+                                transport=transport)
         total = sum(v.stats.get("derived_edges", 0)
                     for v in self.local_views())
         return run_host_ptg(spec, blocks, bodies,
                             n_threads=n_threads, timeout=timeout,
                             faults=faults, rederive=self.derive_local,
-                            total_edges=total)
+                            total_edges=total, transport=transport)
 
     def __repr__(self) -> str:
         state = (f"{len(self._tasks)} tasks, {len(self._seeds)} seeds"

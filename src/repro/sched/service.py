@@ -499,11 +499,13 @@ class SchedulerService:
 
     def __init__(self, n_shards: int, *, n_threads: int = 2,
                  timeout: float = 120.0,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 transport: Optional[str] = None):
         self.n_shards = n_shards
         self.n_threads = n_threads
         self.timeout = timeout
         self.faults = faults
+        self.transport = transport
         self.bus = _Bus(n_shards)
         self.draining = threading.Event()  # run_ranks arms its deadline here
         self._lock = threading.RLock()
@@ -579,6 +581,8 @@ class SchedulerService:
             # attribute lookup at call time so the chaos-injection wrapper
             # (conftest REPRO_CHAOS) sees this run_ranks call too
             kwargs = {"faults": self.faults} if self.faults is not None else {}
+            if self.transport is not None:
+                kwargs["transport"] = self.transport
             res = core_runtime.run_ranks(
                 self.n_shards, self._rank_main, n_threads=self.n_threads,
                 timeout=self.timeout, serve_scheduler=self, **kwargs)
@@ -932,6 +936,11 @@ class SchedulerService:
 
     def stats(self) -> dict:
         ranks = [s.to_dict() for s in self.rank_stats if s is not None]
+        if not ranks and self.rank_summaries:
+            # cross-process ranks: no shared-memory LiveStats — the final
+            # summaries (which embed the same counters) stand in once the
+            # stream has drained
+            ranks = [s for s in self.rank_summaries if isinstance(s, dict)]
         total = sum(r["blocks_total"] for r in ranks)
         hwm = sum(r["blocks_hwm"] for r in ranks)
         with self._lock:
@@ -969,21 +978,42 @@ class SchedulerService:
                           for s, r in self._subs.items() if not r.resolved}
         lines.append(f"  unresolved (sub -> pending shards): {unresolved}")
         lines.append(f"  capacity: {self.capacity()}")
-        for rt in self._runtimes:
-            if rt is None:
-                continue
-            try:
-                lines.append(f"  rank {rt.rank}: {rt.snapshot()}")
-            except Exception as e:
-                lines.append(f"  rank {rt.rank}: <snapshot failed: {e!r}>")
+        # per-rank state travels through the world's snapshot providers (a
+        # SNAPSHOT request over the control channel on multiproc — ranks
+        # may live in other processes); fall back to the shared-memory
+        # runtime handles when no world is attached
+        for r in range(self.n_shards):
+            snap = None
+            if self._world is not None:
+                try:
+                    snap = self._world.snapshot_rank(r)
+                except Exception as e:
+                    snap = f"<snapshot failed: {e!r}>"
+            if snap is None:
+                rt = self._runtimes[r]
+                if rt is None:
+                    continue
+                try:
+                    snap = rt.snapshot()
+                except Exception as e:
+                    snap = f"<snapshot failed: {e!r}>"
+            lines.append(f"  rank {r}: {snap}")
         return "\n".join(lines)
 
     # ------------------------------------------------------------ rank side
 
     def _rank_main(self, ctx):
-        rt = ShardRuntime(ctx, self)
-        self.rank_stats[ctx.rank] = rt.stats
-        self._runtimes[ctx.rank] = rt
+        # on a cross-process transport the rank talks to the parent-hosted
+        # service/bus through RPC proxies; `self` here is a forked copy
+        # whose locks and threads must never be touched
+        svc = self
+        rpc = getattr(ctx.comm.world, "svc_rpc", None)
+        if rpc is not None:
+            from .proxy import ServiceProxy
+            svc = ServiceProxy(rpc, self.n_shards)
+        rt = ShardRuntime(ctx, svc)
+        svc.rank_stats[ctx.rank] = rt.stats
+        svc._runtimes[ctx.rank] = rt
         rt.serve()
         ctx.tp.join()   # distributed completion protocol, after STOP
         return rt.summary()
@@ -1053,6 +1083,10 @@ class ShardRuntime:
         self.am_publish = ctx.comm.make_active_msg(self._on_publish)
         if self._recover:
             ctx.comm.on_reconfigure = self._reconfigure
+        # forensics: serve-loop state overrides the bare comm snapshot the
+        # rank session registered (works cross-process: the world routes a
+        # SNAPSHOT request here)
+        ctx.comm.world.attach_snapshot_provider(ctx.rank, self.snapshot)
 
     # ------------------------------------------------------------ the loop
 
